@@ -1,0 +1,87 @@
+"""Paper Table 5 ablation: ALS x WBC x PRC, at proxy scale.
+
+The paper's table (ResNet50/ImageNet accuracy):
+  no ALS          -> 0.0   (collapse)
+  ALS only        -> 12.0 / 74.2 (unstable)
+  ALS + WBC       -> 74.1
+  ALS + PRC       -> 13.6  (unstable without WBC)
+  ALS + WBC + PRC -> 75.4
+
+What we can reproduce mechanically on CPU:
+  * no-ALS collapse — gradients quantize to all-zero without the layer
+    scale (deterministic, exact);
+  * the full scheme trains to a loss close to FP32;
+  * removing WBC hurts when the weight distribution drifts (we inject a
+    mean drift to expose it, mirroring the paper's Figure 3 observation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import potq
+from repro.core.policy import (
+    ABLATION_NO_PRC,
+    ABLATION_NO_WBC,
+    FP32_BASELINE,
+    PAPER_FAITHFUL,
+)
+from benchmarks.accuracy_proxy import train_lm
+
+
+def no_als_collapse() -> dict:
+    """Without adaptive scaling, typical gradient magnitudes (<<2^-7)
+    underflow the PoT grid entirely."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (100_000,)) * 1e-5
+    dead = potq.pot_quantize(g, 5, beta=jnp.int32(0))  # alpha = 1
+    alive = potq.pot_quantize(g, 5)  # ALS
+    return {
+        "grad_survival_no_als": float(jnp.mean(dead != 0)),
+        "grad_survival_als": float(jnp.mean(alive != 0)),
+    }
+
+
+def wbc_mse_effect() -> dict:
+    """Figure 3/§4.2: a drifted weight mean inflates quantization MSE;
+    WBC removes it."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 0.02 + 0.015
+    q_raw = potq.pot_quantize(w, 5)
+    q_wbc = potq.pot_quantize(w - jnp.mean(w), 5) + jnp.mean(w)
+    return {
+        "mse_no_wbc": float(jnp.mean((q_raw - w) ** 2)),
+        "mse_wbc": float(jnp.mean((q_wbc - w) ** 2)),
+    }
+
+
+def run(fast: bool = True):
+    steps = 40 if fast else 150
+    rows = {}
+    for name, pol in [
+        ("fp32", FP32_BASELINE),
+        ("ALS+WBC+PRC (full)", PAPER_FAITHFUL),
+        ("ALS+PRC (no WBC)", ABLATION_NO_WBC),
+        ("ALS+WBC (no PRC)", ABLATION_NO_PRC),
+        ("ALS only", dataclasses.replace(
+            PAPER_FAITHFUL, weight_bias_correction=False, ratio_clip_init=None
+        )),
+    ]:
+        rows[name] = {"eval_loss": round(train_lm(pol, steps=steps), 4)}
+    out = {
+        "table5_proxy": rows,
+        "no_als": no_als_collapse(),
+        "wbc": wbc_mse_effect(),
+    }
+    out["claims"] = {
+        "no-ALS kills all gradients": out["no_als"]["grad_survival_no_als"] == 0.0,
+        "ALS keeps gradients alive": out["no_als"]["grad_survival_als"] > 0.5,
+        "WBC reduces quantization MSE": out["wbc"]["mse_wbc"] < out["wbc"]["mse_no_wbc"],
+    }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(fast=False), indent=2))

@@ -1,0 +1,71 @@
+"""Kernel microbenchmark: MF-MAC matmul paths + quantizer throughput.
+
+Wall-clock on this CPU container is NOT the TPU performance story (the
+Pallas kernel runs in interpret mode); the numbers that matter for the
+TPU target are the *derived* columns: VMEM working set per block, MXU
+tile alignment, and arithmetic intensity — those are structural and
+backend-independent.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mfmac, potq
+from repro.core.policy import FP32_BASELINE, PAPER_FAITHFUL
+from repro.kernels import potq_matmul as K
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def vmem_block_bytes(bm, bn, bk):
+    """Derived: VMEM working set of one grid step of the fused kernel."""
+    a = bm * bk * 4
+    w = bk * bn * 4
+    acc = bm * bn * 4
+    bf16_copies = (bm * bk + bk * bn) * 2
+    return a + w + acc + bf16_copies
+
+
+def run():
+    rows = []
+    m, k, n = 512, 512, 512
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    g = jnp.float32(0.95)
+
+    t_fp32 = _time(jax.jit(lambda a, w: mfmac.mf_linear(a, w, policy=FP32_BASELINE)), a, w)
+    rows.append(("mf_linear_fp32_512", t_fp32, f"flops={2*m*k*n:.3g}"))
+    t_potq = _time(jax.jit(lambda a, w: mfmac.mf_linear(a, w, g, policy=PAPER_FAITHFUL)), a, w)
+    rows.append(("mf_linear_potq_512", t_potq,
+                 f"quant_overhead_x={t_potq/max(t_fp32,1e-9):.2f}"))
+    t_q = _time(jax.jit(lambda x: potq.pot_quantize(x, 5)), a)
+    rows.append(("pot_quantize_512x512", t_q,
+                 f"GB_s={(m*k*8/1e9)/(t_q/1e6):.2f}"))
+    t_e = _time(jax.jit(lambda x: potq.pot_encode(x, 5).exp), a)
+    rows.append(("pot_encode_512x512", t_e, "wire=int8"))
+
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 256), (512, 512, 512)]:
+        vb = vmem_block_bytes(bm, bn, bk)
+        ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn + bm * bn) * 4)
+        rows.append((
+            f"kernel_block_{bm}x{bn}x{bk}", 0.0,
+            f"vmem_KiB={vb/1024:.0f} arith_intensity={ai:.1f} "
+            f"mxu_aligned={'yes' if min(bm,bn,bk)%128==0 else 'no'} "
+            f"fits_vmem={'yes' if vb < 16*2**20 else 'NO'}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,164 @@
+"""Roofline analysis from the dry-run artifacts (assignment §Roofline).
+
+Reads the per-cell JSONs produced by ``repro.launch.dryrun --outdir`` and
+derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / ICI_bw
+
+cost_analysis() on a post-SPMD module reports PER-PARTITION flops/bytes
+(shapes in the partitioned module are local), so no extra division by
+chip count is applied.  Collective bytes come from the optimized HLO (the
+dryrun already sums result-shape bytes with a 2x factor for all-reduce).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (per-chip aggregate used: 2 links usable per axis is
+topology-dependent; we use 1 link = 50 GB/s as the conservative figure
+and note it).
+
+MODEL_FLOPS uses 6·N·D (dense) / 6·N_active·D (MoE) per training token
+(2·N·D for a forward-only/serve step), giving the "useful compute"
+ratio MODEL_FLOPS / HLO_FLOPs that exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from repro import configs as C
+from repro.models import registry, spec as pspec
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (conservative single-link figure)
+
+
+def param_count(cfg) -> int:
+    return pspec.count_params(registry.param_specs(cfg))
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token (MoE: top_k experts + shared + non-expert)."""
+    specs = registry.param_specs(cfg)
+    total = pspec.count_params(specs)
+    if cfg.moe is None:
+        return total
+    moe = specs["layers"]["moe"]
+    expert_leaves = [moe[k]["w"] for k in ("gate", "up", "down")]
+    expert_params = sum(math.prod(s.shape) for s in expert_leaves)
+    active_frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - expert_params * (1 - active_frac))
+
+
+def model_flops(cfg, shape) -> float:
+    """Global 'useful' FLOPs for the step."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = C.config_for_shape(
+        C.get_config(arch), next(s for s in C.ALL_SHAPES if s.name == shape_name)
+    )
+    shape = next(s for s in C.ALL_SHAPES if s.name == shape_name)
+    chips = rec["chips"]
+    weighted = rec.get("weighted", {})
+    if "flops" in weighted:  # loop-weighted analyzer (preferred)
+        flops_chip = weighted["flops"]
+        bytes_chip = weighted["hbm_bytes"]
+        coll_chip = weighted["collective_bytes"]
+    else:  # fall back to raw cost_analysis (loop bodies counted once!)
+        flops_chip = rec.get("flops") or 0.0
+        bytes_chip = rec.get("bytes_accessed") or 0.0
+        coll_chip = rec.get("collectives", {}).get("total_bytes", 0)
+    t_comp = flops_chip / PEAK_FLOPS
+    t_mem = bytes_chip / HBM_BW
+    t_coll = coll_chip / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_chip = mf / chips
+    useful = mf_chip / flops_chip if flops_chip else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per chip over what the
+    # bottleneck term allows in the same wall-time window
+    frac = (mf_chip / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "chips": chips,
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_chip": mf_chip,
+        "hlo_flops_per_chip": flops_chip,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "memory_per_chip": rec.get("memory", {}),
+        "microbatches": rec.get("microbatches"),
+    }
+
+
+def load_all(outdir: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        r = analyze_cell(rec)
+        if r:
+            rows.append(r)
+        elif rec.get("status", "").startswith("skipped"):
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+                "dominant": "N/A (skipped by design)",
+            })
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "compute_s" not in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"{r['dominant']} | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2%} |")
+    return "\n".join(lines)
+
+
+def run(outdir: str = "results/dryrun"):
+    rows = load_all(outdir)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = run(outdir)
+    print(markdown_table(rows))

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one section per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows plus JSON blocks per table.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="short training runs (CI mode)")
+    ap.add_argument("--skip-training", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import energy
+
+    print("## Table 1 + Table 2: energy model")
+    e = energy.run()
+    print(json.dumps(e, indent=2))
+    assert all(e["paper_claims"].values()), e["paper_claims"]
+
+    print("\n## Kernel microbench (name,us_per_call,derived)")
+    from benchmarks import kernelbench
+
+    for name, us, derived in kernelbench.run():
+        print(f"{name},{us:.1f},{derived}")
+
+    if not args.skip_training:
+        from benchmarks import accuracy_proxy
+
+        print("\n## Table 3/4 proxy: accuracy (FP32 vs 5/5/5 vs 4/4/4)")
+        print(json.dumps(accuracy_proxy.run(fast=args.fast), indent=2))
+
+        from benchmarks import ablation
+
+        print("\n## Table 5 proxy: ablation (ALS/WBC/PRC)")
+        ab = ablation.run(fast=args.fast)
+        print(json.dumps(ab, indent=2))
+        assert ab["claims"]["no-ALS kills all gradients"]
+
+    print("\n## Roofline (from dry-run artifacts, if present)")
+    from benchmarks import roofline
+
+    rows = roofline.run()
+    if rows:
+        print(roofline.markdown_table(rows))
+    else:
+        print("(run PYTHONPATH=src python -m repro.launch.dryrun "
+              "--arch all --shape all --both-meshes --outdir results/dryrun)")
+    print("\nBENCHMARKS DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.analysis.hlo_cost import analyze_hlo  # noqa: F401

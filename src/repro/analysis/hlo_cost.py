@@ -1,0 +1,257 @@
+"""Loop-weighted cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE regardless
+of trip count (verified empirically — a scan of 10 matmuls reports the
+flops of one), which understates per-step cost by a factor of
+(n_layers x microbatches) for scanned models.  This module re-derives the
+three roofline inputs by walking the HLO call graph and multiplying loop
+bodies by their ``known_trip_count`` backend_config:
+
+  * flops            — 2 * numel(result) * contracted_size per dot
+                       (dots inside fusion computations included)
+  * hbm bytes        — sum of operand+result bytes of top-level
+                       instructions (post-fusion top level ~= HBM traffic;
+                       fusion internals excluded)
+  * collective bytes — per-chip wire traffic with ring-algorithm factors:
+                       all-reduce 2x(g-1)/g, all-gather/reduce-scatter/
+                       all-to-all (g-1)/g of the FULL logical tensor,
+                       collective-permute 1x result; group size g parsed
+                       from replica_groups.
+
+Shapes in a post-SPMD module are per-partition, so all outputs are
+per-chip quantities.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "s2": 1, "u2": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops with no (or negligible) HBM data movement of their own
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def _shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    numel_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES.get(dt, 4)
+    return numel_total, bytes_total
+
+
+class _Inst:
+    __slots__ = ("name", "type_str", "opcode", "rest")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.rest = rest  # operands + attrs (unsplit tail of the line)
+
+
+def _parse(text: str) -> Dict[str, List[_Inst]]:
+    comps: Dict[str, List[_Inst]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            comps[cur].append(_Inst(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are at the start of rest, up to the matching ')'
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    cur = re.sub(r"/\*[^*]*\*/", "", cur)
+    for tok in cur.split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok[1:])
+    return out
+
+
+def _dot_flops(inst: _Inst, symbols: Dict[str, str]) -> float:
+    out_numel, _ = _shape_numel_bytes(inst.type_str)
+    ops = _operand_names(inst.rest)
+    m = _CDIMS_RE.search(inst.rest)
+    contracted = 1
+    if m and ops:
+        lhs_type = symbols.get(ops[0], "")
+        shapes = _SHAPE_RE.findall(lhs_type)
+        if shapes:
+            dims = [int(d) for d in shapes[0][1].split(",") if d]
+            for di in m.group(1).split(","):
+                if di and int(di) < len(dims):
+                    contracted *= dims[int(di)]
+    return 2.0 * out_numel * contracted
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _collective_bytes(inst: _Inst, symbols: Dict[str, str], n_chips: int) -> float:
+    kind = inst.opcode[:-6] if inst.opcode.endswith("-start") else inst.opcode
+    if kind not in _COLL_KINDS:
+        return 0.0
+    _, res_bytes = _shape_numel_bytes(inst.type_str)
+    g = _group_size(inst.rest, n_chips)
+    if g <= 1:
+        return 0.0
+    ring = (g - 1) / g
+    if kind == "all-gather":
+        return res_bytes * ring  # result is the gathered (full) tensor
+    if kind == "all-reduce":
+        return 2.0 * res_bytes * ring
+    if kind == "reduce-scatter":
+        return res_bytes * g * ring  # result is the small shard
+    if kind == "all-to-all":
+        return res_bytes * ring
+    # collective-permute: one send+recv of the tensor
+    return res_bytes
+
+
+def analyze_hlo(text: str, n_chips: int = 1) -> Dict[str, float]:
+    comps = _parse(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    memo: Dict[str, Tuple[float, float, float, dict]] = {}
+
+    def cost(comp_name: str, count_bytes: bool) -> Tuple[float, float, float, dict]:
+        key = comp_name + ("|b" if count_bytes else "")
+        if key in memo:
+            return memo[key]
+        insts = comps.get(comp_name, [])
+        symbols = {i.name: i.type_str for i in insts}
+        flops = bytes_ = coll = 0.0
+        coll_detail: Dict[str, float] = {}
+        for inst in insts:
+            op = inst.opcode
+            if op == "dot":
+                flops += _dot_flops(inst, symbols)
+            kind = op[:-6] if op.endswith("-start") else op
+            if kind in _COLL_KINDS:
+                b = _collective_bytes(inst, symbols, n_chips)
+                coll += b
+                coll_detail[kind] = coll_detail.get(kind, 0.0) + b
+            if count_bytes and op not in _NO_BYTES and not op.endswith("-done"):
+                _, rb = _shape_numel_bytes(inst.type_str)
+                op_bytes = []
+                for o in _operand_names(inst.rest):
+                    if o in symbols:
+                        op_bytes.append(_shape_numel_bytes(symbols[o])[1])
+                ob = sum(op_bytes)
+                if "dynamic-update-slice" in inst.name or op == "dynamic-update-slice":
+                    # in-place update: the big destination buffer is aliased,
+                    # real traffic ~= the updated slice (other operands) r+w
+                    big = max(op_bytes, default=0)
+                    ob = ob - big
+                    rb = ob  # write back the slice, not the whole buffer
+                bytes_ += rb + ob
+            # recurse into called computations
+            if op == "while":
+                mtrip = _TRIP_RE.search(inst.rest)
+                trips = int(mtrip.group(1)) if mtrip else 1
+                mb = re.search(r"body=%([\w.\-]+)", inst.rest)
+                if mb:
+                    f, b, c, d = cost(mb.group(1), count_bytes)
+                    flops += f * trips
+                    bytes_ += b * trips
+                    coll += c * trips
+                    for k, v in d.items():
+                        coll_detail[k] = coll_detail.get(k, 0.0) + v * trips
+            elif op == "fusion":
+                mc = re.search(r"calls=%([\w.\-]+)", inst.rest)
+                if mc:
+                    # dots/collectives inside fusions count; bytes don't
+                    # (fusion internals never touch HBM)
+                    f, _b, c, d = cost(mc.group(1), False)
+                    flops += f
+                    coll += c
+                    for k, v in d.items():
+                        coll_detail[k] = coll_detail.get(k, 0.0) + v
+            elif op in ("call", "async-start"):
+                mc = re.search(r"to_apply=%([\w.\-]+)|calls=%([\w.\-]+)", inst.rest)
+                if mc:
+                    name = mc.group(1) or mc.group(2)
+                    f, b, c, d = cost(name, count_bytes)
+                    flops += f
+                    bytes_ += b
+                    coll += c
+                    for k, v in d.items():
+                        coll_detail[k] = coll_detail.get(k, 0.0) + v
+            elif op == "conditional":
+                for mb in re.finditer(r"(?:branch_computations=\{|true_computation=%|false_computation=%)", inst.rest):
+                    pass  # conditionals are not emitted by this codebase's models
+        memo[key] = (flops, bytes_, coll, coll_detail)
+        return memo[key]
+
+    f, b, c, d = cost(entry, True)
+    return {
+        "flops": f,
+        "hbm_bytes": b,
+        "collective_bytes": c,
+        "collective_detail": d,
+    }

@@ -1,0 +1,19 @@
+"""Core of the paper's contribution: ALS-PoTQ + MF-MAC + WBC + PRC."""
+from repro.core.policy import (  # noqa: F401
+    QuantPolicy,
+    PAPER_FAITHFUL,
+    FP32_BASELINE,
+    ABLATION_NO_WBC,
+    ABLATION_NO_PRC,
+)
+from repro.core.potq import (  # noqa: F401
+    pot_emax,
+    compute_beta,
+    pot_quantize,
+    pot_encode,
+    pot_decode,
+    PotEncoded,
+    weight_bias_correction,
+    ratio_clip,
+)
+from repro.core.mfmac import mf_linear, mf_expert_linear, mf_act_dot  # noqa: F401

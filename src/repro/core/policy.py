@@ -1,0 +1,79 @@
+"""Quantization policy configuration for multiplication-free training.
+
+A :class:`QuantPolicy` describes how the ALS-PoTQ / MF-MAC scheme is applied
+to a model's linear layers.  It is a frozen dataclass so it can be a static
+argument to ``jax.jit`` and hashed into compilation caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Paper-faithful defaults: 5-bit PoT on W/A/G, WBC on, PRC on.
+
+    Attributes:
+      enabled: master switch.  ``False`` => plain FP32/bf16 matmuls (the
+        paper's "Original" baseline).
+      bits_w / bits_a / bits_g: PoT bit-widths (1 sign + b-1 exponent bits).
+        The paper uses b=5 everywhere, with b=6 for the final layer's G
+        (Appendix D) — expressed via ``bits_g_last``.
+      bits_g_last: bit-width for the last linear layer's activation grads.
+      weight_bias_correction: subtract mean(W) before quantization (WBC).
+      ratio_clip_init: initial value for the PRC clipping-ratio parameter
+        gamma (one scalar per layer, trained).  ``None`` disables PRC.
+      stochastic_rounding: round the log2 exponent stochastically instead of
+        to-nearest.  Beyond-paper knob (paper uses nearest); keeps the
+        quantizer unbiased, used by the gradient-compression path.
+      quantize_attention: ALSO run the attention QK^T / PV activation-by-
+        activation matmuls through MF-MAC.  Beyond-paper extension, off for
+        paper-faithful runs.
+      use_pallas: dispatch quantized matmuls to the fused Pallas TPU kernel
+        (True) or the pure-jnp reference path (False).  Both compute the
+        same function; tests assert allclose.
+      accum_dtype: accumulation dtype of the MF-MAC.  The paper accumulates
+        INT32; the TPU MXU accumulates float32.  See DESIGN.md §2.
+    """
+
+    enabled: bool = True
+    bits_w: int = 5
+    bits_a: int = 5
+    bits_g: int = 5
+    bits_g_last: int = 6
+    weight_bias_correction: bool = True
+    ratio_clip_init: Optional[float] = 0.95
+    stochastic_rounding: bool = False
+    quantize_attention: bool = False
+    use_pallas: bool = False
+    accum_dtype: str = "float32"
+    # Serving: weights were already WBC'd + ALS-PoTQ quantized at load time
+    # (serve/quantized_weights.py) and are stored as exact PoT values in
+    # bf16 — skip WBC/re-quantization in mf_linear.
+    weights_prequantized: bool = False
+
+    @property
+    def prc_enabled(self) -> bool:
+        return self.ratio_clip_init is not None
+
+    def bits_for(self, tensor: str, is_last_layer: bool = False) -> int:
+        if tensor == "w":
+            return self.bits_w
+        if tensor == "a":
+            return self.bits_a
+        if tensor == "g":
+            return self.bits_g_last if is_last_layer else self.bits_g
+        raise ValueError(f"unknown tensor kind {tensor!r}")
+
+
+#: The paper's training scheme (Algorithm 1).
+PAPER_FAITHFUL = QuantPolicy()
+
+#: FP32 baseline ("Original" rows of Tables 3/4).
+FP32_BASELINE = QuantPolicy(enabled=False)
+
+#: Ablation variants for paper Table 5.
+ABLATION_NO_WBC = dataclasses.replace(PAPER_FAITHFUL, weight_bias_correction=False)
+ABLATION_NO_PRC = dataclasses.replace(PAPER_FAITHFUL, ratio_clip_init=None)
+ABLATION_NO_ALS = "no_als"  # handled specially: fixed scale alpha=1 (collapses)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import make_batch, batch_specs, input_specs  # noqa: F401

@@ -1,0 +1,186 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+* :func:`potq_matmul`     — fused PRC-clip + WBC + ALS-PoTQ + matmul.
+* :func:`pot_value_matmul`— tiled matmul over already-PoT-valued operands
+  (what core/mfmac.py dispatches to when policy.use_pallas=True).
+
+On this CPU container the kernels run in interpret mode (the Pallas body
+executes in Python); on TPU set ``interpret=False`` (default resolves by
+backend).  Ragged shapes are zero-padded to block multiples — zero padding
+is exact for both the quantizer (0 -> 0) and the matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import potq
+from repro.kernels import potq_encode as _ke
+from repro.kernels import potq_matmul as _k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _pick_blocks(m, n, k, bm, bn, bk):
+    """Clamp block sizes to (padded) problem dims, keep >=8x128 lane tiles."""
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(128, n))
+    bk = min(bk, max(128, k))
+    return bm, bn, bk
+
+
+def potq_matmul(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    bits_a: int = 5,
+    bits_w: int = 5,
+    w_mean: Optional[jax.Array] = None,
+    clip_t: Optional[jax.Array] = None,
+    bm: int = _k.DEFAULT_BM,
+    bn: int = _k.DEFAULT_BN,
+    bk: int = _k.DEFAULT_BK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused ALS-PoTQ quantize + matmul: a(M,K) @ w(K,N) -> (M,N) f32.
+
+    Layer-wise betas are derived from global amax reductions (one cheap
+    pass, as in the paper); everything else is fused in-kernel.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    a = a.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, k = a.shape
+    _, n = w.shape
+
+    if clip_t is None:
+        clip_t = jnp.float32(jnp.inf)
+    a_eff_max = jnp.minimum(jnp.max(jnp.abs(a)), clip_t)
+    if w_mean is None:
+        w_mean = jnp.float32(0.0)
+    w_eff = jnp.max(jnp.abs(w - w_mean))
+
+    emax_a = potq.pot_emax(bits_a)
+    emax_w = potq.pot_emax(bits_w)
+
+    def beta_of(amax, emax):
+        safe = jnp.where(amax > 0, amax, 1.0)
+        b = jnp.round(jnp.log2(safe)).astype(jnp.int32) - emax
+        return jnp.where(amax > 0, b, 0)
+
+    beta_a = beta_of(a_eff_max, emax_a)
+    beta_w = beta_of(w_eff, emax_w)
+
+    one = lambda v: jnp.full((1, 1), v, jnp.float32)
+    sa = one(potq.exp2i(-beta_a))
+    sw = one(potq.exp2i(-beta_w))
+    deq = one(potq.exp2i(beta_a + beta_w))
+
+    ap = _pad_to(a, 8, 128)
+    wp = _pad_to(w, 128, 128)
+    bm_, bn_, bk_ = _pick_blocks(ap.shape[0], wp.shape[1], ap.shape[1], bm, bn, bk)
+    ap = _pad_to(ap, bm_, bk_)
+    wp = _pad_to(wp, bk_, bn_)
+    out = _k.potq_matmul_padded(
+        ap,
+        wp,
+        sa,
+        sw,
+        deq,
+        one(w_mean),
+        one(clip_t),
+        emax_a=emax_a,
+        emax_w=emax_w,
+        quantize=True,
+        bm=bm_,
+        bn=bn_,
+        bk=bk_,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def pot_value_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = _k.DEFAULT_BM,
+    bn: int = _k.DEFAULT_BN,
+    bk: int = _k.DEFAULT_BK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M,K)@(K,N) matmul over already-quantized (PoT-valued) operands."""
+    if interpret is None:
+        interpret = _default_interpret()
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    m, k = x.shape
+    _, n = y.shape
+    one = lambda v: jnp.full((1, 1), v, jnp.float32)
+    xp = _pad_to(x, 8, 128)
+    yp = _pad_to(y, 128, 128)
+    bm_, bn_, bk_ = _pick_blocks(xp.shape[0], yp.shape[1], xp.shape[1], bm, bn, bk)
+    xp = _pad_to(xp, bm_, bk_)
+    yp = _pad_to(yp, bk_, bn_)
+    out = _k.potq_matmul_padded(
+        xp,
+        yp,
+        one(1.0),
+        one(1.0),
+        one(1.0),
+        one(0.0),
+        one(jnp.inf),
+        quantize=False,
+        bm=bm_,
+        bn=bn_,
+        bk=bk_,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def potq_encode(
+    x: jax.Array,
+    *,
+    bits: int = 5,
+    bm: int = _ke.DEFAULT_BM,
+    bn: int = _ke.DEFAULT_BN,
+    interpret: Optional[bool] = None,
+) -> tuple:
+    """Encode a tensor to int8 PoT codes + scalar beta (wire format).
+
+    Matches core.compress layout: code 0 => zero; otherwise
+    |code| = exp + emax + 1, sign(code) = sign(value).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    orig_shape = x.shape
+    x2 = x.astype(jnp.float32).reshape(-1, orig_shape[-1]) if x.ndim > 1 else (
+        x.astype(jnp.float32).reshape(1, -1)
+    )
+    emax = potq.pot_emax(bits)
+    beta = potq.compute_beta(x2, bits)
+    scale = jnp.full((1, 1), potq.exp2i(-beta), jnp.float32)
+    m, n = x2.shape
+    xp = _pad_to(x2, 8, 128)
+    bm_ = min(bm, xp.shape[0])
+    bn_ = min(bn, max(128, xp.shape[1]))
+    xp = _pad_to(xp, bm_, bn_)
+    codes = _ke.potq_encode_padded(
+        xp, scale, emax=emax, bm=bm_, bn=bn_, interpret=interpret
+    )[:m, :n]
+    return codes.reshape(orig_shape), beta

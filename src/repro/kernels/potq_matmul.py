@@ -1,0 +1,148 @@
+"""Fused ALS-PoTQ quantize + matmul Pallas TPU kernel.
+
+TPU-native adaptation of the paper's MF-MAC (DESIGN.md §2): operands are
+streamed HBM->VMEM once, PRC-clipped / WBC-shifted / PoT-quantized *inside
+VMEM*, multiplied on the MXU in bf16 (exact for PoT values), accumulated in
+an FP32 VMEM scratch across the K grid, and dequantized by a single scalar
+2^(beta_a+beta_w) multiply per output tile (the paper's one INT32 shift per
+block).  No FP32 quantized intermediates ever touch HBM.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the
+accumulator scratch carries across K steps.  Block shapes default to
+MXU-aligned multiples of 128 and are tunable; the ops.py wrapper pads
+ragged shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def _quantize_tile(x, emax: int):
+    """Round-to-nearest PoT quantization of a pre-scaled VMEM tile."""
+    mag = jnp.abs(x)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe))
+    under = (e < -emax) | (mag == 0)
+    e = jnp.clip(e, float(-emax), float(emax))
+    # exact 2^e via exponent-bit construction (jnp.exp2 is inexact on
+    # exp(x*ln2) backends; see core.potq.exp2i)
+    ebits = ((e.astype(jnp.int32) + 127).astype(jnp.uint32)) << 23
+    p2 = jax.lax.bitcast_convert_type(ebits, jnp.float32)
+    q = jnp.where(under, 0.0, p2)
+    return jnp.sign(x) * q
+
+
+def _potq_matmul_kernel(
+    a_ref,
+    w_ref,
+    sa_ref,  # (1,1) f32: 2^-beta_a
+    sw_ref,  # (1,1) f32: 2^-beta_w
+    deq_ref,  # (1,1) f32: 2^(beta_a+beta_w)
+    wmean_ref,  # (1,1) f32: WBC mean (0 if disabled)
+    clip_ref,  # (1,1) f32: PRC threshold (+inf if disabled)
+    o_ref,
+    acc_ref,
+    *,
+    emax_a: int,
+    emax_w: int,
+    quantize: bool,
+    nk: int,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    if quantize:
+        t = clip_ref[0, 0]
+        a = jnp.clip(a, -t, t)  # PRC, fused
+        w = w - wmean_ref[0, 0]  # WBC, fused
+        # exponent-add scaling (exact multiply by a power of two)
+        aq = _quantize_tile(a * sa_ref[0, 0], emax_a)
+        wq = _quantize_tile(w * sw_ref[0, 0], emax_w)
+    else:
+        aq, wq = a, w
+    acc_ref[...] += jnp.dot(
+        aq.astype(jnp.bfloat16),
+        wq.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] * deq_ref[0, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "emax_a",
+        "emax_w",
+        "quantize",
+        "bm",
+        "bn",
+        "bk",
+        "interpret",
+    ),
+)
+def potq_matmul_padded(
+    a: jax.Array,  # (M, K), M % bm == 0, K % bk == 0
+    w: jax.Array,  # (K, N), N % bn == 0
+    scale_a: jax.Array,  # (1,1) f32
+    scale_w: jax.Array,  # (1,1) f32
+    dequant: jax.Array,  # (1,1) f32
+    w_mean: jax.Array,  # (1,1) f32
+    clip_t: jax.Array,  # (1,1) f32
+    *,
+    emax_a: int = 7,
+    emax_w: int = 7,
+    quantize: bool = True,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        a.shape,
+        w.shape,
+        (bm, bn, bk),
+    )
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    return pl.pallas_call(
+        functools.partial(
+            _potq_matmul_kernel,
+            emax_a=emax_a,
+            emax_w=emax_w,
+            quantize=quantize,
+            nk=nk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            scalar_spec,
+            scalar_spec,
+            scalar_spec,
+            scalar_spec,
+            scalar_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, w, scale_a, scale_w, dequant, w_mean, clip_t)

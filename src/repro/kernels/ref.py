@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports here)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import potq
+from repro.core.potq import exp2i
+
+
+def quantize_tile_ref(x: jax.Array, emax: int) -> jax.Array:
+    """Round-to-nearest PoT quantization of an already-scaled tile.
+
+    Input is assumed pre-scaled by 2^-beta; output values are in
+    {0, +-2^e : e in [-emax, emax]} — the scaled PoT domain.
+    """
+    mag = jnp.abs(x)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe))
+    under = (e < -emax) | (mag == 0)
+    e = jnp.clip(e, -emax, emax)
+    q = jnp.where(under, 0.0, exp2i(jnp.where(under, 0.0, e)))
+    return jnp.sign(x) * q
+
+
+def pot_value_matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(M,K)@(K,N) matmul over PoT-valued operands, bf16 MXU semantics."""
+    return jnp.dot(
+        x.astype(jnp.bfloat16),
+        y.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def potq_matmul_ref(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    bits_a: int = 5,
+    bits_w: int = 5,
+    w_mean: Optional[jax.Array] = None,
+    clip_t: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Oracle for the fused quantize+matmul kernel.
+
+    a: (M, K) raw activations; w: (K, N) raw weights.
+    w_mean: scalar WBC mean to subtract from w (None = no WBC).
+    clip_t: scalar PRC threshold for a (None = no clipping).
+    """
+    a = a.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    if clip_t is not None:
+        a = jnp.clip(a, -clip_t, clip_t)
+    if w_mean is not None:
+        w = w - w_mean
+    beta_a = potq.compute_beta(a, bits_a)
+    beta_w = potq.compute_beta(w, bits_w)
+    sa = exp2i(-beta_a)
+    sw = exp2i(-beta_w)
+    aq = quantize_tile_ref(a * sa, potq.pot_emax(bits_a))
+    wq = quantize_tile_ref(w * sw, potq.pot_emax(bits_w))
+    out = pot_value_matmul_ref(aq, wq)
+    # Single per-block dequant shift by beta_a + beta_w (paper's INT32 shift).
+    return out * exp2i(beta_a + beta_w)

@@ -1,0 +1,375 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+(The XLA_FLAGS lines above MUST precede every jax import — device count
+locks on first jax init.)
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * the program fits (memory_analysis),
+  * and extracts the roofline terms (cost_analysis + collective bytes
+    parsed from the optimized HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.core import policy as policy_lib
+from repro.data import pipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, spec as pspec
+from repro.optim import sgd_momentum, step_decay_schedule
+from repro.parallel import actshard, sharding as shd
+from repro.train import TrainConfig, make_train_step
+
+# Per-arch microbatch counts for train_4k (global_batch=256); chosen so the
+# per-microbatch batch still divides the largest FSDP axis (32) and live
+# activations fit 16 GB/chip (validated by memory_analysis).
+MICROBATCHES = {
+    "llama4-scout-17b-a16e": 8,
+    "grok-1-314b": 8,
+    "internvl2-76b": 8,
+    "whisper-large-v3": 4,
+}
+DEFAULT_MICRO = 4
+
+_SHAPE_RE = re.compile(r"([a-z]+\d+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Sum result bytes of collective ops in optimized (post-SPMD) HLO.
+
+    Per-chip traffic estimate (ring algorithms, (n-1)/n ~ 1):
+      all-gather / all-to-all / collective-permute / reduce-scatter: 1x
+      all-reduce: 2x (reduce-scatter + all-gather phases)
+    Start/done async pairs are counted once (the -start op).
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        type_str, opname = m.group(1), m.group(2)
+        for kind in _COLL_KINDS:
+            if opname == kind or opname == kind + "-start":
+                b = _shape_bytes(type_str)
+                factor = 2 if kind == "all-reduce" else 1
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += b * factor
+    stats["total_bytes"] = sum(
+        v["bytes"] for k, v in stats.items() if isinstance(v, dict)
+    )
+    return stats
+
+
+def build_train_lowering(cfg, shape, mesh, policy, microbatches=None):
+    specs = registry.param_specs(cfg)
+    abstract_params = pspec.abstract(specs)
+    param_ps = shd.param_pspecs(specs, mesh)
+    opt = sgd_momentum(step_decay_schedule(0.1, [30000, 60000, 90000]))
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+    # optimizer state mirrors params: momentum leaf i shares param i's spec
+    opt_ps = {"mu": param_ps}
+    m = microbatches or MICROBATCHES.get(cfg.name, DEFAULT_MICRO)
+    if shape.global_batch % m or (shape.global_batch // m) % _fsdp(mesh):
+        m = 1
+    tstep = make_train_step(
+        cfg, policy, opt, TrainConfig(microbatches=m, clip_norm=1.0), mesh=mesh
+    )
+    batch_sds = pipeline.batch_specs(cfg, shape)
+    batch_ps = shd.data_pspecs(mesh, batch_sds)
+    in_shardings = (
+        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), param_ps),
+        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), opt_ps),
+        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), batch_ps),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (
+        in_shardings[0],
+        in_shardings[1],
+        jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), {
+            "loss": 0, "grad_norm": 0, "step": 0,
+        }),
+    )
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(tstep, in_shardings=in_shardings, out_shardings=out_shardings)
+    with mesh, actshard.use_mesh(mesh):
+        lowered = jitted.lower(abstract_params, abstract_opt, batch_sds, step_sds)
+    return lowered, {"microbatches": m}
+
+
+def build_serve_lowering(cfg, shape, mesh, policy, quantized_weights=False):
+    """decode shapes: one serve_step (single new token, seq_len KV cache).
+
+    ``quantized_weights``: serve from bf16 PoT-quantized weights
+    (serve/quantized_weights.py) — bit-identical outputs, half the
+    weight-read bytes (EXPERIMENTS.md §Perf decode iteration)."""
+    import dataclasses as _dc
+
+    b = shape.global_batch
+    abstract_cache = jax.eval_shape(
+        lambda: registry.init_cache(cfg, b, shape.seq_len)
+    )
+    cache_ps = shd.cache_pspecs(mesh, abstract_cache)
+    specs = registry.param_specs(cfg)
+    abstract_params = pspec.abstract(specs)
+    if quantized_weights:
+        policy = _dc.replace(policy, weights_prequantized=True)
+
+        def _to_bf16(path, sds):
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if keys and keys[-1] == "w" and len(sds.shape) >= 2:
+                return jax.ShapeDtypeStruct(sds.shape, jnp.bfloat16)
+            return sds
+
+        abstract_params = jax.tree_util.tree_map_with_path(
+            _to_bf16, abstract_params
+        )
+    param_ps = shd.param_pspecs(specs, mesh)
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_ps = shd.batch_pspec(mesh, 0, None, 1, batch_size=b, seq_len=None)
+
+    def serve_step(params, token, cache):
+        return registry.decode_step(cfg, policy, params, token, cache)
+
+    ns = lambda p: NamedSharding(mesh, p)
+    in_shardings = (
+        jax.tree_util.tree_map(ns, param_ps),
+        ns(tok_ps),
+        jax.tree_util.tree_map(ns, cache_ps),
+    )
+    out_shardings = (
+        ns(shd.batch_pspec(mesh, 0, None, 2, batch_size=b, seq_len=None)),
+        jax.tree_util.tree_map(ns, cache_ps),
+    )
+    jitted = jax.jit(serve_step, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(2,))
+    with mesh, actshard.use_mesh(mesh):
+        lowered = jitted.lower(abstract_params, tok_sds, abstract_cache)
+    return lowered, {}
+
+
+def build_prefill_lowering(cfg, shape, mesh, policy):
+    """prefill shapes: full-sequence forward producing the KV cache."""
+    b = shape.global_batch
+    batch_sds = pipeline.batch_specs(cfg, shape)
+    batch_ps = shd.data_pspecs(mesh, batch_sds)
+    abstract_cache = jax.eval_shape(
+        lambda: registry.init_cache(cfg, b, shape.seq_len)
+    )
+    cache_ps = shd.cache_pspecs(mesh, abstract_cache)
+    specs = registry.param_specs(cfg)
+    abstract_params = pspec.abstract(specs)
+    param_ps = shd.param_pspecs(specs, mesh)
+
+    def prefill_step(params, batch, cache):
+        return registry.prefill(cfg, policy, params, batch, cache)
+
+    ns = lambda p: NamedSharding(mesh, p)
+    in_shardings = (
+        jax.tree_util.tree_map(ns, param_ps),
+        jax.tree_util.tree_map(ns, batch_ps),
+        jax.tree_util.tree_map(ns, cache_ps),
+    )
+    out_shardings = (
+        ns(shd.batch_pspec(mesh, 0, None, 2, batch_size=b, seq_len=None)),
+        jax.tree_util.tree_map(ns, cache_ps),
+    )
+    jitted = jax.jit(prefill_step, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(2,))
+    with mesh, actshard.use_mesh(mesh):
+        lowered = jitted.lower(abstract_params, batch_sds, abstract_cache)
+    return lowered, {}
+
+
+def _fsdp(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, policy=None,
+             save_hlo: str = ""):
+    policy = policy or policy_lib.PAPER_FAITHFUL
+    cfg0 = C.get_config(arch)
+    shape = next(s for s in C.ALL_SHAPES if s.name == shape_name)
+    import dataclasses as _dc
+
+    cfg = C.config_for_shape(cfg0, shape)  # e.g. mistral long_500k -> windowed
+    cfg = _dc.replace(cfg, act_dtype="bfloat16")  # production stream dtype
+    if shape not in C.shapes_for(cfg):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped (full attention @512k by design)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered, extra = build_train_lowering(cfg, shape, mesh, policy)
+    elif shape.kind == "prefill":
+        lowered, extra = build_prefill_lowering(cfg, shape, mesh, policy)
+    else:
+        # production serving default: bf16 PoT-quantized weights (exact;
+        # serve/quantized_weights.py)
+        lowered, extra = build_serve_lowering(
+            cfg, shape, mesh, policy, quantized_weights=True
+        )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "optimal_seconds"):
+            if ca and k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    n_chips = 512 if multi_pod else 256
+    # loop-weighted per-chip roofline inputs (repro.analysis.hlo_cost):
+    # cost_analysis() counts while bodies once; this multiplies by
+    # known_trip_count and applies ring-algorithm collective factors.
+    from repro.analysis import analyze_hlo
+
+    try:
+        weighted = analyze_hlo(hlo, n_chips=n_chips)
+        weighted_small = {
+            "flops": weighted["flops"],
+            "hbm_bytes": weighted["hbm_bytes"],
+            "collective_bytes": weighted["collective_bytes"],
+            "collective_detail": weighted["collective_detail"],
+        }
+    except Exception as e:  # pragma: no cover
+        weighted_small = {"error": str(e)}
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "cost": cost,
+        "collectives": coll,
+        "weighted": weighted_small,
+        **extra,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--outdir", default="", help="per-cell JSON directory")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+    if args.outdir:
+        os.makedirs(args.outdir, exist_ok=True)
+
+    archs = list(C.ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = (
+        [s.name for s in C.ALL_SHAPES] if args.shape == "all" else [args.shape]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for sname in shapes:
+            for mp in meshes:
+                print(f"=== {arch} x {sname} x "
+                      f"{'multi-pod(2,16,16)' if mp else 'single-pod(16,16)'}",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, sname, mp, save_hlo=args.save_hlo)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": sname, "multi_pod": mp,
+                           "status": f"FAILED: {type(e).__name__}: {e}"}
+                print(json.dumps(
+                    {k: rec.get(k) for k in
+                     ("arch", "shape", "multi_pod", "status", "compile_s",
+                      "flops", "bytes_accessed", "memory", "microbatches")},
+                    default=str), flush=True)
+                results.append(rec)
+                if args.outdir:
+                    cell = f"{arch}__{sname}__{'mp' if mp else 'sp'}.json"
+                    with open(os.path.join(args.outdir, cell), "w") as f:
+                        json.dump(rec, f, indent=2, default=str)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    bad = [r for r in results if r["status"].startswith("FAILED")]
+    print(f"\n{len(results)-len(bad)}/{len(results)} cells OK")
+    if bad:
+        for r in bad:
+            print("FAILED:", r["arch"], r["shape"], r["multi_pod"], r["status"])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: generic transformer (dense/GQA/MoE/VLM), Mamba2 SSD,
+RG-LRU hybrid, Whisper enc-dec — all built on MF-MAC quantized linears."""

@@ -1,0 +1,85 @@
+"""Small ResNet-style CNN on synthetic images — the paper's primary model
+family (conv layers through mf_conv2d = im2col + MF-MAC).
+
+Used by the accuracy-proxy benchmark (Tables 3/5 at CPU scale) and the
+``examples/cnn_classification.py`` driver.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mfmac
+from repro.core.policy import QuantPolicy
+from repro.models.spec import ParamSpec
+
+
+def cnn_specs(num_classes: int = 10, width: int = 16):
+    w = width
+    conv = lambda kh, kw, ci, co: {
+        "w": ParamSpec((kh, kw, ci, co), (None, None, None, None), std=0.1),
+        "gamma": ParamSpec((), (), init="value", value=0.95),
+    }
+    return {
+        "stem": conv(3, 3, 3, w),
+        "block1a": conv(3, 3, w, w),
+        "block1b": conv(3, 3, w, w),
+        "block2a": conv(3, 3, w, 2 * w),
+        "block2b": conv(3, 3, 2 * w, 2 * w),
+        "proj2": conv(1, 1, w, 2 * w),
+        "head": {
+            "w": ParamSpec((2 * w, num_classes), (None, None), std=0.1),
+            "gamma": ParamSpec((), (), init="value", value=0.95),
+        },
+    }
+
+
+def _bn_free_norm(x):
+    # parameter-free norm (keeps the benchmark focused on the quantizer)
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def forward(policy: QuantPolicy, params, images):
+    """images: (B, H, W, 3) -> logits (B, classes)."""
+    c = lambda p, x, stride=1: mfmac.mf_conv2d(
+        x, p["w"], p["gamma"], policy=policy, stride=stride
+    )
+    x = jax.nn.relu(_bn_free_norm(c(params["stem"], images)))
+    h = jax.nn.relu(_bn_free_norm(c(params["block1a"], x)))
+    h = _bn_free_norm(c(params["block1b"], h))
+    x = jax.nn.relu(x + h)
+    h = jax.nn.relu(_bn_free_norm(c(params["block2a"], x, stride=2)))
+    h = _bn_free_norm(c(params["block2b"], h))
+    x = jax.nn.relu(c(params["proj2"], x, stride=2) + h)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    hp = params["head"]
+    return mfmac.mf_linear(x, hp["w"], hp["gamma"], policy=policy, is_last=True)
+
+
+def loss_fn(policy, params, images, labels):
+    logits = forward(policy, params, images).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_dataset(key, n: int, num_classes: int = 10, res: int = 16):
+    """Learnable synthetic classification: class = dominant frequency
+    pattern + noise."""
+    kp, kn, kl = jax.random.split(key, 3)
+    labels = jax.random.randint(kl, (n,), 0, num_classes)
+    xs = jnp.linspace(0, 1, res)
+    xx, yy = jnp.meshgrid(xs, xs)
+    protos = jnp.stack(
+        [
+            jnp.sin(2 * jnp.pi * (k + 1) * xx / 3 + k)
+            + jnp.cos(2 * jnp.pi * (k + 1) * yy / 4)
+            for k in range(num_classes)
+        ]
+    )  # (C, H, W)
+    base = protos[labels][..., None]  # (N, H, W, 1)
+    imgs = jnp.tile(base, (1, 1, 1, 3))
+    noise = jax.random.normal(kn, imgs.shape) * 0.5
+    return imgs + noise, labels

@@ -1,0 +1,146 @@
+"""Shared model components: norms, RoPE, activations, attention.
+
+Everything outside the linear-layer MACs stays FP32 — exactly the paper's
+scope boundary (it quantizes MACs in linear layers only).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mfmac
+from repro.core.policy import QuantPolicy
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def nonparametric_layer_norm(x, eps: float = 1e-5):
+    """OLMo-style LN without learned scale/bias (arXiv:2402.00838)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, params):
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    if kind == "ln":
+        return layer_norm(x, params["scale"], params["bias"])
+    if kind == "nonparam_ln":
+        return nonparametric_layer_norm(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / cross / decode-with-cache)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head H/KV times."""
+    b, s, kv, d = k.shape
+    rep = n_heads // kv
+    if rep == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, d))
+    return k.reshape(b, s, n_heads, d)
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KV, D)
+    v: jax.Array,  # (B, Skv, KV, D)
+    *,
+    policy: QuantPolicy,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: Optional[jax.Array] = None,  # global position of q[0] (decode)
+    kv_valid_len: Optional[jax.Array] = None,  # valid cache length (decode)
+) -> jax.Array:
+    """Plain softmax attention, FP32 scores.
+
+    When ``policy.quantize_attention`` the QK^T and PV matmuls go through
+    MF-MAC (activation x activation; beyond-paper opt-in).
+    Sequence sharding: all indexing below is via global iotas so the SPMD
+    partitioner can shard Sq/Skv and insert the collectives it needs.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kf = _expand_kv(k, h)
+    vf = _expand_kv(v, h)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    # scores: (B, H, Sq, Skv)
+    scores = mfmac.mf_act_dot(
+        jnp.transpose(q, (0, 2, 1, 3)),
+        jnp.transpose(kf, (0, 2, 1, 3)),
+        (((3,), (3,)), ((0, 1), (0, 1))),
+        policy=policy,
+    ).astype(jnp.float32) * scale
+
+    qpos = jax.lax.iota(jnp.int32, sq)
+    if q_offset is not None:
+        qpos = qpos + q_offset
+    kpos = jax.lax.iota(jnp.int32, skv)
+    mask = jnp.ones((sq, skv), jnp.bool_)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= kpos[None, :] < kv_valid_len
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    out = mfmac.mf_act_dot(
+        probs.astype(q.dtype),
+        jnp.transpose(vf, (0, 2, 1, 3)),
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        policy=policy,
+    )  # (B, H, Sq, D)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)

@@ -1,0 +1,375 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq, frame_dim) which a
+single (quantized) linear projects into the encoder width.  Everything
+else — 32 encoder layers (bidirectional), 32 decoder layers (causal self
+attention + cross attention) — is real and MF-MAC quantized.
+
+whisper-large-v3 has 32 encoder AND 32 decoder layers; the assigned "32L"
+is interpreted as 32+32 (recorded in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mfmac
+from repro.models import common
+from repro.models.spec import ParamSpec
+from repro.parallel import actshard
+
+
+def _linear(shape, axes, std, stacked=True):
+    if axes and axes[0] == "layer":
+        gshape, gaxes = (shape[0],), ("layer",)
+    else:
+        gshape, gaxes = (), ()
+    return {
+        "w": ParamSpec(shape, axes, std=std),
+        "gamma": ParamSpec(gshape, gaxes, init="value", value=0.95),
+    }
+
+
+def _ln(L, d):
+    return {
+        "scale": ParamSpec((L, d), ("layer", None), init="ones"),
+        "bias": ParamSpec((L, d), ("layer", None), init="zeros"),
+    }
+
+
+def encdec_specs(cfg: ModelConfig):
+    d, hd, std = cfg.d_model, cfg.head_dim, 0.02
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    h, kv, f = cfg.n_heads, cfg.kv_heads, cfg.d_ff
+    enc_layer = {
+        "ln1": _ln(Le, d),
+        "ln2": _ln(Le, d),
+        "wq": _linear((Le, d, h * hd), ("layer", "embed", "heads"), std),
+        "wk": _linear((Le, d, kv * hd), ("layer", "embed", "kv"), std),
+        "wv": _linear((Le, d, kv * hd), ("layer", "embed", "kv"), std),
+        "wo": _linear((Le, h * hd, d), ("layer", "heads", "embed"), std),
+        "wi": _linear((Le, d, f), ("layer", "embed", "ffn"), std),
+        "wo2": _linear((Le, f, d), ("layer", "ffn", "embed"), std),
+    }
+    dec_layer = {
+        "ln1": _ln(Ld, d),
+        "ln_cross": _ln(Ld, d),
+        "ln2": _ln(Ld, d),
+        "wq": _linear((Ld, d, h * hd), ("layer", "embed", "heads"), std),
+        "wk": _linear((Ld, d, kv * hd), ("layer", "embed", "kv"), std),
+        "wv": _linear((Ld, d, kv * hd), ("layer", "embed", "kv"), std),
+        "wo": _linear((Ld, h * hd, d), ("layer", "heads", "embed"), std),
+        "cq": _linear((Ld, d, h * hd), ("layer", "embed", "heads"), std),
+        "ck": _linear((Ld, d, kv * hd), ("layer", "embed", "kv"), std),
+        "cv": _linear((Ld, d, kv * hd), ("layer", "embed", "kv"), std),
+        "co": _linear((Ld, h * hd, d), ("layer", "heads", "embed"), std),
+        "wi": _linear((Ld, d, f), ("layer", "embed", "ffn"), std),
+        "wo2": _linear((Ld, f, d), ("layer", "ffn", "embed"), std),
+    }
+    return {
+        "frame_proj": _linear((cfg.frame_dim, d), (None, "embed"), std),
+        "enc_pos": ParamSpec((cfg.enc_seq, d), (None, "embed"), std=0.01),
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), std=0.02),
+        "enc_layers": enc_layer,
+        "dec_layers": dec_layer,
+        "enc_norm": {
+            "scale": ParamSpec((d,), (None,), init="ones"),
+            "bias": ParamSpec((d,), (None,), init="zeros"),
+        },
+        "dec_norm": {
+            "scale": ParamSpec((d,), (None,), init="ones"),
+            "bias": ParamSpec((d,), (None,), init="zeros"),
+        },
+    }
+
+
+def _proj_heads(p, name, x, policy, b, s, nh, hd):
+    q = mfmac.mf_linear(x, p[name]["w"], p[name]["gamma"], policy=policy)
+    return q.reshape(b, s, nh, hd)
+
+
+def _mha(cfg, policy, q, k, v, qpos, kpos, causal):
+    from repro.models.transformer import _sdpa
+
+    if causal:
+        return _sdpa(cfg, policy, q, k, v, qpos, kpos, None)
+    # bidirectional: reuse _sdpa with an always-true mask via qpos >= kpos
+    # trick is wrong; do it directly here.
+    b, sq, h, hd = q.shape
+    kf = common._expand_kv(k, h)
+    vf = common._expand_kv(v, h)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = (
+        mfmac.mf_act_dot(
+            jnp.transpose(q, (0, 2, 1, 3)),
+            jnp.transpose(kf, (0, 2, 1, 3)),
+            (((3,), (3,)), ((0, 1), (0, 1))),
+            policy=policy,
+        ).astype(jnp.float32)
+        * scale
+    )
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = mfmac.mf_act_dot(
+        probs.astype(q.dtype),
+        jnp.transpose(vf, (0, 2, 1, 3)),
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        policy=policy,
+    )
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
+
+
+def encode(cfg, policy, params, frames, *, remat: bool = True):
+    """frames: (B, enc_seq, frame_dim) precomputed embeddings (stub)."""
+    fp = params["frame_proj"]
+    x = mfmac.mf_linear(
+        frames.astype(jnp.float32), fp["w"], fp["gamma"], policy=policy
+    )
+    x = (x + params["enc_pos"][None]).astype(cfg.act_dtype)
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    pos = jax.lax.iota(jnp.int32, s)
+
+    def body(carry, lp):
+        h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q = _proj_heads(lp, "wq", h, policy, b, s, cfg.n_heads, hd)
+        k = _proj_heads(lp, "wk", h, policy, b, s, cfg.kv_heads, hd)
+        v = _proj_heads(lp, "wv", h, policy, b, s, cfg.kv_heads, hd)
+        att = _mha(cfg, policy, q, k, v, pos, pos, causal=False)
+        att = att.reshape(b, s, cfg.n_heads * hd)
+        y = carry + mfmac.mf_linear(
+            att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
+        )
+        h2 = common.layer_norm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        m = common.gelu(
+            mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
+        )
+        y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
+        return actshard.shard_tokens(y), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x = actshard.shard_tokens(x)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.layer_norm(
+        x, params["enc_norm"]["scale"], params["enc_norm"]["bias"]
+    )
+
+
+def _dec_block(cfg, policy, lp, x, enc_out, qpos, *, cache=None):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    se = enc_out.shape[1]
+    epos = jax.lax.iota(jnp.int32, se)
+    h = common.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+    q = _proj_heads(lp, "wq", h, policy, b, s, cfg.n_heads, hd)
+    k = _proj_heads(lp, "wk", h, policy, b, s, cfg.kv_heads, hd)
+    v = _proj_heads(lp, "wv", h, policy, b, s, cfg.kv_heads, hd)
+    qp = jnp.broadcast_to(qpos[None, :], (b, s))
+    q = common.rope(q, qp, cfg.rope_theta)
+    k = common.rope(k, qp, cfg.rope_theta)
+    new_kv = (k, v)
+    if cache is not None:
+        ck, cv, kpos, slot = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        k, v = ck.astype(q.dtype), cv.astype(q.dtype)
+        new_kv = (ck, cv)
+    else:
+        kpos = qpos
+    from repro.models.transformer import _sdpa
+
+    att = _sdpa(cfg, policy, q, k, v, qpos, kpos, None)
+    x = x + mfmac.mf_linear(
+        att.reshape(b, s, cfg.n_heads * hd), lp["wo"]["w"], lp["wo"]["gamma"],
+        policy=policy,
+    )
+    # cross attention
+    hc = common.layer_norm(x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"])
+    cq = _proj_heads(lp, "cq", hc, policy, b, s, cfg.n_heads, hd)
+    ck_ = _proj_heads(lp, "ck", enc_out, policy, b, se, cfg.kv_heads, hd)
+    cv_ = _proj_heads(lp, "cv", enc_out, policy, b, se, cfg.kv_heads, hd)
+    catt = _mha(cfg, policy, cq, ck_, cv_, qpos, epos, causal=False)
+    x = x + mfmac.mf_linear(
+        catt.reshape(b, s, cfg.n_heads * hd), lp["co"]["w"], lp["co"]["gamma"],
+        policy=policy,
+    )
+    h2 = common.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+    m = common.gelu(
+        mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
+    )
+    x = x + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
+    return x, new_kv
+
+
+def forward(cfg, policy, params, tokens, frames, *, remat: bool = True):
+    """Returns decoder logits (B, S, V_padded)."""
+    enc_out = encode(cfg, policy, params, frames, remat=remat)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    s = x.shape[1]
+    qpos = jax.lax.iota(jnp.int32, s)
+
+    def body(carry, lp):
+        y, _ = _dec_block(cfg, policy, lp, carry, enc_out, qpos)
+        return actshard.shard_tokens(y), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x = actshard.shard_tokens(x)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = common.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    # Whisper ties the output head to the token embedding (embed table is
+    # never pre-quantized => force quantize-at-use).
+    import dataclasses as _dc
+
+    pol = (_dc.replace(policy, weights_prequantized=False)
+           if policy.weights_prequantized else policy)
+    w = params["embed"].T
+    return mfmac.mf_linear(
+        x, w, jnp.float32(policy.ratio_clip_init or 1.0), policy=pol,
+        is_last=True,
+    )
+
+
+def lm_loss(cfg, policy, params, tokens, frames, labels, loss_mask):
+    logits = forward(cfg, policy, params, tokens, frames).astype(jnp.float32)
+    vpad = cfg.vocab_padded
+    if vpad != cfg.vocab:
+        invalid = jax.lax.iota(jnp.int32, vpad) >= cfg.vocab
+        logits = jnp.where(invalid[None, None, :], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum((logz - gold) * loss_mask) / denom
+
+
+# --- decode ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L, kv, hd = cfg.n_layers, cfg.kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        # cross-attention K/V precomputed once from the encoder output
+        "ck": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+        "cv": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, policy, params, tokens, frames, cache):
+    enc_out = encode(cfg, policy, params, frames, remat=False)
+    b, s = tokens.shape
+    hd = cfg.head_dim
+    se = enc_out.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    qpos = jax.lax.iota(jnp.int32, s)
+
+    def body(carry, lp):
+        y, (k, v) = _dec_block(cfg, policy, lp, carry, enc_out, qpos)
+        ck_ = _proj_heads(lp, "ck", enc_out, policy, b, se, cfg.kv_heads, hd)
+        cv_ = _proj_heads(lp, "cv", enc_out, policy, b, se, cfg.kv_heads, hd)
+        return y, (k, v, ck_, cv_)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = common.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    import dataclasses as _dc
+
+    _pol = (_dc.replace(policy, weights_prequantized=False)
+            if policy.weights_prequantized else policy)
+    w = params["embed"].T
+    logits = mfmac.mf_linear(
+        x[:, -1:, :], w, jnp.float32(policy.ratio_clip_init or 1.0),
+        policy=_pol, is_last=True,
+    )[:, 0, :]
+    span = cache["k"].shape[2]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    new_cache = dict(cache)
+    new_cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+    )
+    new_cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+    )
+    new_cache["pos"] = jax.lax.dynamic_update_slice(cache["pos"], pos, (0,))
+    new_cache["ck"] = cks.astype(cache["ck"].dtype)
+    new_cache["cv"] = cvs.astype(cache["cv"].dtype)
+    new_cache["len"] = jnp.asarray(s, jnp.int32)
+    return logits, new_cache
+
+
+def decode_step(cfg, policy, params, token, cache):
+    b = token.shape[0]
+    hd = cfg.head_dim
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    pos = cache["len"]
+    span = cache["k"].shape[2]
+    slot = pos % span
+    qpos = pos[None].astype(jnp.int32)
+    kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+    se = cache["ck"].shape[2]
+    epos = jax.lax.iota(jnp.int32, se)
+
+    def body(carry, lp_kv):
+        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q = _proj_heads(lp, "wq", h, policy, b, 1, cfg.n_heads, hd)
+        k = _proj_heads(lp, "wk", h, policy, b, 1, cfg.kv_heads, hd)
+        v = _proj_heads(lp, "wv", h, policy, b, 1, cfg.kv_heads, hd)
+        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
+        q = common.rope(q, pq, cfg.rope_theta)
+        k = common.rope(k, pq, cfg.rope_theta)
+        ck_self = jax.lax.dynamic_update_slice(
+            ck_self, k.astype(ck_self.dtype), (0, slot, 0, 0)
+        )
+        cv_self = jax.lax.dynamic_update_slice(
+            cv_self, v.astype(cv_self.dtype), (0, slot, 0, 0)
+        )
+        from repro.models.transformer import _sdpa
+
+        att = _sdpa(
+            cfg, policy, q, ck_self.astype(q.dtype), cv_self.astype(q.dtype),
+            qpos, kpos, None,
+        )
+        y = carry + mfmac.mf_linear(
+            att.reshape(b, 1, cfg.n_heads * hd), lp["wo"]["w"],
+            lp["wo"]["gamma"], policy=policy,
+        )
+        hc = common.layer_norm(y, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"])
+        cq = _proj_heads(lp, "cq", hc, policy, b, 1, cfg.n_heads, hd)
+        catt = _mha(
+            cfg, policy, cq, ck_x.astype(cq.dtype), cv_x.astype(cq.dtype),
+            qpos, epos, causal=False,
+        )
+        y = y + mfmac.mf_linear(
+            catt.reshape(b, 1, cfg.n_heads * hd), lp["co"]["w"],
+            lp["co"]["gamma"], policy=policy,
+        )
+        h2 = common.layer_norm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        m = common.gelu(
+            mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
+        )
+        y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
+        return y, (ck_self, cv_self)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    x = common.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    import dataclasses as _dc
+
+    _pol2 = (_dc.replace(policy, weights_prequantized=False)
+             if policy.weights_prequantized else policy)
+    w = params["embed"].T
+    logits = mfmac.mf_linear(
+        x, w, jnp.float32(policy.ratio_clip_init or 1.0), policy=_pol2,
+        is_last=True,
+    )[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["k"] = nk
+    new_cache["v"] = nv
+    new_cache["pos"] = kpos
+    new_cache["len"] = pos + 1
+    return logits, new_cache

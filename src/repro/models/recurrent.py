@@ -1,0 +1,324 @@
+"""RecurrentGemma / Griffin hybrid backbone (arXiv:2402.19427).
+
+Block pattern 1:2 — two RG-LRU recurrent blocks then one local (sliding
+window) attention block, repeating.  Layers are heterogeneous, so the stack
+is built as an unrolled tuple of per-layer param dicts (26 layers unrolled
+is still a small HLO; scan is reserved for the homogeneous families).
+
+RG-LRU recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(LAMBDA) * r_t), computed via an associative
+scan for training/prefill and a single elementwise step for decode.  The
+recurrence is elementwise gating (not a MAC-dominated linear layer) and
+stays FP32 — DESIGN.md §5; the surrounding projections are MF-MAC
+quantized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mfmac
+from repro.core.policy import QuantPolicy
+from repro.models import common
+from repro.models.spec import ParamSpec
+from repro.parallel import actshard
+
+LRU_C = 8.0
+
+
+def _linear(shape, axes, std):
+    return {
+        "w": ParamSpec(shape, axes, std=std),
+        "gamma": ParamSpec((), (), init="value", value=0.95),
+    }
+
+
+def layer_kinds(cfg: ModelConfig):
+    pattern = cfg.pattern or ("rglru", "rglru", "attn")
+    return tuple(pattern[i % len(pattern)] for i in range(cfg.n_layers))
+
+
+def hybrid_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    lw = cfg.lru_width or d
+    std = 0.02
+    layers = []
+    for kind in layer_kinds(cfg):
+        if kind == "attn":
+            hd = cfg.head_dim
+            layers.append(
+                {
+                    "kind_attn": ParamSpec((), (), init="ones"),  # marker
+                    "ln1": {"scale": ParamSpec((d,), (None,), init="ones")},
+                    "ln2": {"scale": ParamSpec((d,), (None,), init="ones")},
+                    "wq": _linear((d, cfg.n_heads * hd), ("embed", "heads"), std),
+                    "wk": _linear((d, cfg.kv_heads * hd), ("embed", "kv"), std),
+                    "wv": _linear((d, cfg.kv_heads * hd), ("embed", "kv"), std),
+                    "wo": _linear((cfg.n_heads * hd, d), ("heads", "embed"), std),
+                    "mlp": {
+                        "wi_gate": _linear((d, cfg.d_ff), ("embed", "ffn"), std),
+                        "wi_up": _linear((d, cfg.d_ff), ("embed", "ffn"), std),
+                        "wo": _linear((cfg.d_ff, d), ("ffn", "embed"), std),
+                    },
+                }
+            )
+        else:
+            layers.append(
+                {
+                    "ln1": {"scale": ParamSpec((d,), (None,), init="ones")},
+                    "ln2": {"scale": ParamSpec((d,), (None,), init="ones")},
+                    "wx": _linear((d, lw), ("embed", "ffn"), std),
+                    "wy": _linear((d, lw), ("embed", "ffn"), std),
+                    "conv_w": ParamSpec((cfg.conv_width, lw), (None, None), std=0.2),
+                    "conv_b": ParamSpec((lw,), (None,), init="zeros"),
+                    "wa": _linear((lw, lw), ("ffn", "ffn"), std),
+                    "wi": _linear((lw, lw), ("ffn", "ffn"), std),
+                    "lam": ParamSpec((lw,), (None,), init="value", value=0.5),
+                    "wout": _linear((lw, d), ("ffn", "embed"), std),
+                    "mlp": {
+                        "wi_gate": _linear((d, cfg.d_ff), ("embed", "ffn"), std),
+                        "wi_up": _linear((d, cfg.d_ff), ("embed", "ffn"), std),
+                        "wo": _linear((cfg.d_ff, d), ("ffn", "embed"), std),
+                    },
+                }
+            )
+    return {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), std=0.02),
+        "layers": tuple(layers),
+        "final_norm": {"scale": ParamSpec((d,), (None,), init="ones")},
+        "lm_head": _linear((d, cfg.vocab_padded), ("embed", "vocab"), std),
+    }
+
+
+def _mlp(cfg, policy, p, x):
+    g = mfmac.mf_linear(x, p["wi_gate"]["w"], p["wi_gate"]["gamma"], policy=policy)
+    u = mfmac.mf_linear(x, p["wi_up"]["w"], p["wi_up"]["gamma"], policy=policy)
+    h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return mfmac.mf_linear(h, p["wo"]["w"], p["wo"]["gamma"], policy=policy)
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array] = None):
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t over axis 1 (S)."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    if h0 is not None:
+        hh = hh + aa * h0[:, None, :]
+    return hh
+
+
+def _rglru_block(cfg, policy, p, x, *, conv_state=None, lru_state=None):
+    """Griffin recurrent block. x: (B,S,D).
+
+    With conv_state/lru_state given (decode), S is expected to be 1 and the
+    new states are returned; otherwise runs the full-sequence scan.
+    """
+    lw = (cfg.lru_width or cfg.d_model)
+    h = common.rms_norm(x, p["ln1"]["scale"])
+    xb = mfmac.mf_linear(h, p["wx"]["w"], p["wx"]["gamma"], policy=policy)
+    yb = mfmac.mf_linear(h, p["wy"]["w"], p["wy"]["gamma"], policy=policy)
+    yb = jax.nn.gelu(yb.astype(jnp.float32)).astype(x.dtype)
+
+    # temporal conv (depthwise, causal, width 4)
+    w, b = p["conv_w"], p["conv_b"]
+    width = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(xb, ((0, 0), (width - 1, 0), (0, 0)))
+        new_conv_state = xp[:, xp.shape[1] - (width - 1) :, :]
+    else:
+        xp = jnp.concatenate([conv_state, xb], axis=1)
+        new_conv_state = xp[:, 1:, :]
+    conv = jnp.zeros_like(xb)
+    for i in range(width):
+        conv = conv + xp[:, i : i + xb.shape[1], :] * w[i]
+    conv = conv + b
+
+    # RG-LRU gates
+    r = jax.nn.sigmoid(
+        mfmac.mf_linear(conv, p["wa"]["w"], p["wa"]["gamma"], policy=policy)
+        .astype(jnp.float32)
+    )
+    i_g = jax.nn.sigmoid(
+        mfmac.mf_linear(conv, p["wi"]["w"], p["wi"]["gamma"], policy=policy)
+        .astype(jnp.float32)
+    )
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,lw)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i_g * conv.astype(jnp.float32)
+    )
+    if lru_state is None:
+        hseq = _rglru_scan(a, gated)
+        new_lru_state = hseq[:, -1, :]
+    else:
+        hseq = a * lru_state[:, None, :] + gated
+        new_lru_state = hseq[:, -1, :]
+    out = hseq.astype(x.dtype) * yb
+    out = mfmac.mf_linear(out, p["wout"]["w"], p["wout"]["gamma"], policy=policy)
+    x = x + out
+    h2 = common.rms_norm(x, p["ln2"]["scale"])
+    x = x + _mlp(cfg, policy, p["mlp"], h2)
+    return x, (new_conv_state, new_lru_state)
+
+
+def _attn_block(cfg, policy, p, x, qpos, *, cache=None):
+    """Local-attention block; cache=(k, v, kpos, slot) for decode."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = common.rms_norm(x, p["ln1"]["scale"])
+    q = mfmac.mf_linear(h, p["wq"]["w"], p["wq"]["gamma"], policy=policy)
+    k = mfmac.mf_linear(h, p["wk"]["w"], p["wk"]["gamma"], policy=policy)
+    v = mfmac.mf_linear(h, p["wv"]["w"], p["wv"]["gamma"], policy=policy)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.kv_heads, hd)
+    v = v.reshape(b, s, cfg.kv_heads, hd)
+    pq = jnp.broadcast_to(qpos[None, :], (b, s))
+    q = common.rope(q, pq, cfg.rope_theta)
+    k = common.rope(k, pq, cfg.rope_theta)
+    new_kv = (k, v)
+    if cache is not None:
+        ck, cv, kpos, slot = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        k, v = ck.astype(q.dtype), cv.astype(q.dtype)
+        new_kv = (ck, cv)
+    else:
+        kpos = qpos
+    from repro.models.transformer import _sdpa
+
+    att = _sdpa(cfg, policy, q, k, v, qpos, kpos, cfg.window)
+    att = att.reshape(b, s, cfg.n_heads * hd)
+    x = x + mfmac.mf_linear(att, p["wo"]["w"], p["wo"]["gamma"], policy=policy)
+    h2 = common.rms_norm(x, p["ln2"]["scale"])
+    x = x + _mlp(cfg, policy, p["mlp"], h2)
+    return x, new_kv
+
+
+def forward(cfg, policy, params, tokens, *, remat: bool = True):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    s = x.shape[1]
+    qpos = jax.lax.iota(jnp.int32, s)
+    kinds = layer_kinds(cfg)
+    x = actshard.shard_tokens(x)
+    for kind, p in zip(kinds, params["layers"]):
+        if kind == "attn":
+            fn = lambda xx, pp=p: _attn_block(cfg, policy, pp, xx, qpos)[0]
+        else:
+            fn = lambda xx, pp=p: _rglru_block(cfg, policy, pp, xx)[0]
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        x = actshard.shard_tokens(fn(x))
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    return mfmac.mf_linear(x, hp["w"], hp["gamma"], policy=policy, is_last=True)
+
+
+def lm_loss(cfg, policy, params, tokens, labels, loss_mask):
+    logits = forward(cfg, policy, params, tokens).astype(jnp.float32)
+    vpad = cfg.vocab_padded
+    if vpad != cfg.vocab:
+        invalid = jax.lax.iota(jnp.int32, vpad) >= cfg.vocab
+        logits = jnp.where(invalid[None, None, :], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum((logz - gold) * loss_mask) / denom
+
+
+# --- decode ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    lw = cfg.lru_width or cfg.d_model
+    span = min(max_len, cfg.window or max_len)
+    caches = []
+    for kind in layer_kinds(cfg):
+        if kind == "attn":
+            caches.append(
+                {
+                    "k": jnp.zeros((batch, span, cfg.kv_heads, cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, span, cfg.kv_heads, cfg.head_dim), dtype),
+                    "pos": jnp.full((span,), -1, jnp.int32),
+                }
+            )
+        else:
+            caches.append(
+                {
+                    "conv": jnp.zeros((batch, cfg.conv_width - 1, lw), jnp.float32),
+                    "lru": jnp.zeros((batch, lw), jnp.float32),
+                }
+            )
+    return {"layers": tuple(caches), "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg, policy, params, tokens, cache):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    qpos = jax.lax.iota(jnp.int32, s)
+    kinds = layer_kinds(cfg)
+    new_layers = []
+    for kind, p, c in zip(kinds, params["layers"], cache["layers"]):
+        if kind == "attn":
+            x, (k, v) = _attn_block(cfg, policy, p, x, qpos)
+            span = c["k"].shape[1]
+            take = min(s, span)
+            kt = k[:, s - take :].astype(c["k"].dtype)
+            vt = v[:, s - take :].astype(c["v"].dtype)
+            pos = jnp.arange(s - take, s, dtype=jnp.int32)
+            if take == span:
+                shift = s % span
+                nc = {
+                    "k": jnp.roll(kt, shift, axis=1),
+                    "v": jnp.roll(vt, shift, axis=1),
+                    "pos": jnp.roll(pos, shift),
+                }
+            else:
+                nc = {
+                    "k": jax.lax.dynamic_update_slice(c["k"], kt, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(c["v"], vt, (0, 0, 0, 0)),
+                    "pos": jax.lax.dynamic_update_slice(c["pos"], pos, (0,)),
+                }
+            new_layers.append(nc)
+        else:
+            x, (cs, ls) = _rglru_block(cfg, policy, p, x)
+            new_layers.append({"conv": cs.astype(jnp.float32), "lru": ls})
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    logits = mfmac.mf_linear(
+        x[:, -1:, :], hp["w"], hp["gamma"], policy=policy, is_last=True
+    )[:, 0, :]
+    return logits, {"layers": tuple(new_layers), "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg, policy, params, token, cache):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    pos = cache["len"]
+    qpos = pos[None].astype(jnp.int32)
+    kinds = layer_kinds(cfg)
+    new_layers = []
+    for kind, p, c in zip(kinds, params["layers"], cache["layers"]):
+        if kind == "attn":
+            span = c["k"].shape[1]
+            slot = pos % span
+            kpos = jax.lax.dynamic_update_slice(c["pos"], pos[None], (slot,))
+            x, (nk, nv) = _attn_block(
+                cfg, policy, p, x, qpos, cache=(c["k"], c["v"], kpos, slot)
+            )
+            new_layers.append({"k": nk, "v": nv, "pos": kpos})
+        else:
+            x, (cs, ls) = _rglru_block(
+                cfg, policy, p, x, conv_state=c["conv"], lru_state=c["lru"]
+            )
+            new_layers.append({"conv": cs.astype(jnp.float32), "lru": ls})
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    logits = mfmac.mf_linear(
+        x, hp["w"], hp["gamma"], policy=policy, is_last=True
+    )[:, 0, :]
+    return logits, {"layers": tuple(new_layers), "len": pos + 1}

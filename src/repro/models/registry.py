@@ -1,0 +1,98 @@
+"""Family dispatch: one uniform API over all model families.
+
+``batch`` is a dict; keys by family:
+  decoder        tokens, labels, mask
+  vlm            tokens, labels, mask, patch_embeds
+  encdec         tokens, labels, mask, frames
+  hybrid / ssm   tokens, labels, mask
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.models import encdec, recurrent, ssm, transformer
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family in ("decoder", "vlm"):
+        return transformer.decoder_specs(cfg)
+    if cfg.family == "ssm":
+        return ssm.ssm_specs(cfg)
+    if cfg.family == "hybrid":
+        return recurrent.hybrid_specs(cfg)
+    if cfg.family == "encdec":
+        return encdec.encdec_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig, policy: QuantPolicy, params, batch: Dict[str, Any]):
+    if cfg.family == "vlm":
+        return transformer.lm_loss(
+            cfg, policy, params, batch["tokens"], batch["labels"],
+            batch["mask"], patch_embeds=batch["patch_embeds"],
+        )
+    if cfg.family == "decoder":
+        return transformer.lm_loss(
+            cfg, policy, params, batch["tokens"], batch["labels"], batch["mask"]
+        )
+    if cfg.family == "ssm":
+        return ssm.lm_loss(
+            cfg, policy, params, batch["tokens"], batch["labels"], batch["mask"]
+        )
+    if cfg.family == "hybrid":
+        return recurrent.lm_loss(
+            cfg, policy, params, batch["tokens"], batch["labels"], batch["mask"]
+        )
+    if cfg.family == "encdec":
+        return encdec.lm_loss(
+            cfg, policy, params, batch["tokens"], batch["frames"],
+            batch["labels"], batch["mask"],
+        )
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("decoder", "vlm"):
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return ssm.init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return recurrent.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg, policy, params, batch, cache):
+    if cfg.family == "vlm":
+        return transformer.prefill(
+            cfg, policy, params, batch["tokens"], cache,
+            patch_embeds=batch.get("patch_embeds"),
+        )
+    if cfg.family == "decoder":
+        return transformer.prefill(cfg, policy, params, batch["tokens"], cache)
+    if cfg.family == "ssm":
+        return ssm.prefill(cfg, policy, params, batch["tokens"], cache)
+    if cfg.family == "hybrid":
+        return recurrent.prefill(cfg, policy, params, batch["tokens"], cache)
+    if cfg.family == "encdec":
+        return encdec.prefill(
+            cfg, policy, params, batch["tokens"], batch["frames"], cache
+        )
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg, policy, params, token, cache):
+    if cfg.family in ("decoder", "vlm"):
+        return transformer.decode_step(cfg, policy, params, token, cache)
+    if cfg.family == "ssm":
+        return ssm.decode_step(cfg, policy, params, token, cache)
+    if cfg.family == "hybrid":
+        return recurrent.decode_step(cfg, policy, params, token, cache)
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, policy, params, token, cache)
+    raise ValueError(cfg.family)

@@ -1,0 +1,87 @@
+"""Declarative parameter specs.
+
+Models declare their parameters as a pytree of :class:`ParamSpec` (shape +
+init std + *logical axis names*).  From that single declaration we derive:
+
+* materialized FP32 params (untruncated normal init — paper Appendix D),
+* ``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation),
+* ``PartitionSpec`` pytrees via the logical-axis -> mesh-axis rules in
+  ``repro.parallel.sharding``.
+
+Logical axis vocabulary (see DESIGN.md §4):
+  'layer'   — stacked-scan layer axis (never sharded)
+  'embed'   — d_model
+  'ffn'     — feed-forward hidden
+  'vocab'   — (padded) vocabulary
+  'heads'   — flattened n_heads*head_dim projection output
+  'kv'      — flattened kv_heads*head_dim projection output
+  'expert'  — MoE expert axis
+  'state'   — SSM/RG-LRU recurrent state width
+  None      — replicated axis
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    std: float = 0.02
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'value'
+    value: float = 0.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(f, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def materialize(specs, key: jax.Array):
+    """Initialize real parameters from a spec pytree.
+
+    Untruncated normal init (the paper stresses *untruncated*, §7.1.1).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "value":
+            return jnp.full(s.shape, s.value, s.dtype)
+        return (jax.random.normal(k, s.shape, jnp.float32) * s.std).astype(s.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [init_one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract(specs):
+    """ShapeDtypeStruct pytree for .lower() without allocation."""
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def axes_tree(specs):
+    return _tree_map(lambda s: s.axes, specs)
+
+
+def count_params(specs) -> int:
+    import math
+
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,368 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) backbone.
+
+Chunked SSD algorithm: within chunks of length Q the output is an
+attention-like pair of matmuls (C B^T masked by cumulative decay, times X);
+across chunks a small recurrent state (H, P, N) is carried by a sequential
+scan over n_chunks steps.  The in/out/x projections are MF-MAC quantized
+linear layers (the paper's technique); the elementwise state recurrence
+stays FP32 (DESIGN.md §5 — not a MAC-dominated linear layer).
+
+Decode maintains (conv_state, ssm_state) per layer — O(1) memory in
+sequence length, which is what makes the ``long_500k`` cell runnable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mfmac
+from repro.core.policy import QuantPolicy
+from repro.models import common
+from repro.models.spec import ParamSpec
+from repro.parallel import actshard
+
+HEADDIM = 64  # Mamba2 default head dim P
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // HEADDIM
+    n = cfg.ssm_state
+    # in_proj emits [z, x, B, C, dt]: d_inner + d_inner + N + N + nheads
+    d_in = 2 * d_inner + 2 * n + nheads
+    return d_inner, nheads, n, d_in
+
+
+def _linear(shape, axes, std):
+    if axes and axes[0] == "layer":
+        gshape, gaxes = (shape[0],), ("layer",)
+    else:
+        gshape, gaxes = (), ()
+    return {
+        "w": ParamSpec(shape, axes, std=std),
+        "gamma": ParamSpec(gshape, gaxes, init="value", value=0.95),
+    }
+
+
+def ssm_specs(cfg: ModelConfig):
+    L, d = cfg.n_layers, cfg.d_model
+    d_inner, nheads, n, d_in = _dims(cfg)
+    std = 0.02
+    conv_ch = d_inner + 2 * n  # conv over x, B, C
+    layer = {
+        "norm": {"scale": ParamSpec((L, d), ("layer", None), init="ones")},
+        "in_proj": _linear((L, d, d_in), ("layer", "embed", "ffn"), std),
+        "conv_w": ParamSpec(
+            (L, cfg.conv_width, conv_ch), ("layer", None, None), std=0.2
+        ),
+        "conv_b": ParamSpec((L, conv_ch), ("layer", None), init="zeros"),
+        "A_log": ParamSpec((L, nheads), ("layer", None), init="value", value=0.0),
+        "D": ParamSpec((L, nheads), ("layer", None), init="ones"),
+        "dt_bias": ParamSpec((L, nheads), ("layer", None), init="zeros"),
+        "out_norm": {
+            "scale": ParamSpec((L, d_inner), ("layer", None), init="ones")
+        },
+        "out_proj": _linear((L, d_inner, d), ("layer", "ffn", "embed"), std),
+    }
+    return {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), std=0.02),
+        "layers": layer,
+        "final_norm": {"scale": ParamSpec((d,), (None,), init="ones")},
+        "lm_head": _linear((d, cfg.vocab_padded), ("embed", "vocab"), std),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads, n, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    bb = zxbcdt[..., 2 * d_inner : 2 * d_inner + n]
+    cc = zxbcdt[..., 2 * d_inner + n : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: unrolled taps, pure FP32 elementwise
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+HEAD_GROUP = 4  # heads processed per intra-chunk scan step (memory knob)
+
+
+def _ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int, with_final=False):
+    """SSD forward. x: (B,S,H,P); dt: (B,S,H); b,c: (B,S,N).
+
+    Returns y: (B,S,H,P) (and the final state (B,H,N,P) if with_final).
+    Single B/C group shared across heads (G=1).
+
+    Memory discipline (these shapes hit HBM at production scale):
+      * the (Q,Q) score matrix is shared across heads — computed once;
+      * the per-head decay mask exp(cum_q - cum_k) is materialized only for
+        HEAD_GROUP heads at a time via a scan (a Pallas SSD kernel would
+        keep it in VMEM; this is the XLA-level equivalent);
+      * all 3-operand einsums are split into explicit 2-operand steps so
+        the contraction path never creates a (B,NC,Q,N,H)-sized temp.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    a = -jnp.exp(a_log)  # (H,) negative decay rates
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,H)
+    da = dt * a  # (B,S,H) log-decay per step
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    # reshape into chunks
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h)
+    bc = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cc = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)  # (B,NC,Q,H) inclusive cumsum of log decay
+    qi = jax.lax.iota(jnp.int32, chunk)
+    causal = qi[:, None] >= qi[None, :]
+    # (Q,Q) scores shared by all heads (G=1): C_q · B_k, causal-masked.
+    scores = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)
+    scores = jnp.where(causal[None, None], scores, 0.0)
+
+    # intra-chunk, HEAD_GROUP heads at a time
+    hg = HEAD_GROUP if h % HEAD_GROUP == 0 else 1
+    ng = h // hg
+    cum_g = jnp.moveaxis(
+        cum.reshape(bsz, nc, chunk, ng, hg), 3, 0
+    )  # (NG,B,NC,Q,hg)
+    xc_g = jnp.moveaxis(xc.reshape(bsz, nc, chunk, ng, hg, p), 3, 0)
+
+    def head_step(_, inp):
+        cum_h, x_h = inp  # (B,NC,Q,hg), (B,NC,Q,hg,P)
+        li = cum_h[:, :, :, None, :] - cum_h[:, :, None, :, :]  # (B,NC,Q,Q,hg)
+        lm = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+        m = scores[..., None] * lm  # (B,NC,Q,Q,hg)
+        y = jnp.einsum("bzqkh,bzkhp->bzqhp", m, x_h)
+        return None, y
+
+    _, y_g = jax.lax.scan(head_step, None, (cum_g, xc_g))  # (NG,B,NC,Q,hg,P)
+    y_intra = jnp.moveaxis(y_g, 0, 3).reshape(bsz, nc, chunk, h, p)
+
+    # chunk-final states: S_z = sum_k exp(cum_end - cum_k) * B_k ⊗ x_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,Q,H)
+    wx = xc * decay_to_end[..., None]  # (B,NC,Q,H,P)
+    states = jnp.einsum("bzkn,bzkhp->bzhnp", bc, wx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H) total chunk decay
+
+    # sequential scan over chunks carrying state (B,H,N,P)
+    def step(hprev, inputs):
+        st, dec = inputs  # st: (B,H,N,P), dec: (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    states_t = jnp.moveaxis(states, 1, 0)  # (NC,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # (NC,B,H)
+    hfinal, hprevs = jax.lax.scan(step, h0, (states_t, decay_t))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # (B,NC,H,N,P) state entering chunk
+
+    # inter-chunk: y_q += (C_q · h_in) * exp(cum_q)
+    t = jnp.einsum("bzqn,bzhnp->bzqhp", cc, hprevs)
+    y_inter = t * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    if with_final:
+        return y, hfinal
+    return y
+
+
+def _block(cfg, policy, lp, x, chunk):
+    h = common.rms_norm(x, lp["norm"]["scale"])
+    zxbcdt = mfmac.mf_linear(
+        h, lp["in_proj"]["w"], lp["in_proj"]["gamma"], policy=policy
+    )
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    d_inner, nheads, n, _ = _dims(cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"])
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner : d_inner + n]
+    cc = conv_out[..., d_inner + n :]
+    bsz, s, _ = xs.shape
+    xh = xs.reshape(bsz, s, nheads, HEADDIM)
+    y = _ssd_chunked(
+        xh, dt + lp["dt_bias"], lp["A_log"], bb, cc, lp["D"], chunk
+    )
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = common.rms_norm(y, lp["out_norm"]["scale"])
+    out = mfmac.mf_linear(
+        y, lp["out_proj"]["w"], lp["out_proj"]["gamma"], policy=policy
+    )
+    return x + out
+
+
+def forward(cfg, policy, params, tokens, *, remat: bool = True):
+    x = actshard.shard_tokens(
+        jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    )
+    chunk = min(cfg.ssm_chunk, x.shape[1])
+
+    def body(carry, lp):
+        return actshard.shard_tokens(_block(cfg, policy, lp, carry, chunk)), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    return mfmac.mf_linear(x, hp["w"], hp["gamma"], policy=policy, is_last=True)
+
+
+def lm_loss(cfg, policy, params, tokens, labels, loss_mask):
+    logits = forward(cfg, policy, params, tokens).astype(jnp.float32)
+    vpad = cfg.vocab_padded
+    if vpad != cfg.vocab:
+        invalid = jax.lax.iota(jnp.int32, vpad) >= cfg.vocab
+        logits = jnp.where(invalid[None, None, :], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum((logz - gold) * loss_mask) / denom
+
+
+# --- decode ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    d_inner, nheads, n, _ = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((L, batch, nheads, n, HEADDIM), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _block_decode(cfg, policy, lp, x, conv_state, ssm_state):
+    """x: (B,1,D). Returns (y, new_conv_state, new_ssm_state)."""
+    d_inner, nheads, n, _ = _dims(cfg)
+    h = common.rms_norm(x, lp["norm"]["scale"])
+    zxbcdt = mfmac.mf_linear(
+        h, lp["in_proj"]["w"], lp["in_proj"]["gamma"], policy=policy
+    )
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,W,C)
+    w = lp["conv_w"]  # (W,C)
+    conv_out = jnp.sum(window * w[None], axis=1, keepdims=True) + lp["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:, :]
+
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner : d_inner + n].astype(jnp.float32)
+    cc = conv_out[..., d_inner + n :].astype(jnp.float32)
+    bsz = xs.shape[0]
+    xh = xs.reshape(bsz, nheads, HEADDIM).astype(jnp.float32)
+    dtv = jax.nn.softplus(
+        (dt[:, 0, :] + lp["dt_bias"]).astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(lp["A_log"])  # (H,)
+    decay = jnp.exp(dtv * a)  # (B,H)
+    # h' = decay * h + dt * B ⊗ x ;  y = C·h' + D*x
+    outer = jnp.einsum("bn,bhp->bhnp", bb[:, 0, :], xh * dtv[..., None])
+    new_ssm = ssm_state * decay[:, :, None, None] + outer
+    y = jnp.einsum("bn,bhnp->bhp", cc[:, 0, :], new_ssm)
+    y = y + lp["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y.astype(x.dtype), lp["out_norm"]["scale"])
+    out = mfmac.mf_linear(
+        y, lp["out_proj"]["w"], lp["out_proj"]["gamma"], policy=policy
+    )
+    return x + out, new_conv_state, new_ssm
+
+
+def prefill(cfg, policy, params, tokens, cache):
+    """Sequential-free prefill: run full forward for logits, then replay the
+    last conv_width inputs + full-sequence SSD states into the cache.
+
+    For simplicity (and because SSM prefill is cheap), we recompute states
+    by running the chunked forward and extracting the final state per
+    layer via a dedicated scan."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    chunk = min(cfg.ssm_chunk, x.shape[1])
+    d_inner, nheads, n, _ = _dims(cfg)
+
+    def body(carry, lp):
+        # recompute the block while capturing final conv window + state
+        h = common.rms_norm(carry, lp["norm"]["scale"])
+        zxbcdt = mfmac.mf_linear(
+            h, lp["in_proj"]["w"], lp["in_proj"]["gamma"], policy=policy
+        )
+        z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+        conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+        conv_state = conv_in[:, -(cfg.conv_width - 1) :, :]
+        conv_out = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"])
+        xs2 = conv_out[..., :d_inner]
+        bb2 = conv_out[..., d_inner : d_inner + n]
+        cc2 = conv_out[..., d_inner + n :]
+        bsz, s, _ = xs2.shape
+        xh = xs2.reshape(bsz, s, nheads, HEADDIM)
+        y, final_state = _ssd_with_final_state(
+            xh, dt + lp["dt_bias"], lp["A_log"], bb2, cc2, lp["D"], chunk
+        )
+        y = y.reshape(bsz, s, d_inner).astype(carry.dtype)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(carry.dtype)
+        y = common.rms_norm(y, lp["out_norm"]["scale"])
+        out = mfmac.mf_linear(
+            y, lp["out_proj"]["w"], lp["out_proj"]["gamma"], policy=policy
+        )
+        return carry + out, (conv_state, final_state)
+
+    x, (conv_states, ssm_states) = jax.lax.scan(body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    logits = mfmac.mf_linear(
+        x[:, -1:, :], hp["w"], hp["gamma"], policy=policy, is_last=True
+    )[:, 0, :]
+    cache = {
+        "conv": conv_states.astype(cache["conv"].dtype),
+        "ssm": ssm_states,
+        "len": jnp.asarray(tokens.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def _ssd_with_final_state(x, dt, a_log, b, c, d_skip, chunk):
+    """Like _ssd_chunked but also returns the post-sequence state."""
+    return _ssd_chunked(x, dt, a_log, b, c, d_skip, chunk, with_final=True)
+
+
+def decode_step(cfg, policy, params, token, cache):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def body(carry, lp_states):
+        lp, cs, ss = lp_states
+        y, ncs, nss = _block_decode(cfg, policy, lp, carry, cs, ss)
+        return y, (ncs, nss)
+
+    x, (nconv, nssm) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"])
+    )
+    x = common.rms_norm(x, params["final_norm"]["scale"])
+    hp = params["lm_head"]
+    logits = mfmac.mf_linear(
+        x, hp["w"], hp["gamma"], policy=policy, is_last=True
+    )[:, 0, :]
+    return logits, {
+        "conv": nconv.astype(cache["conv"].dtype),
+        "ssm": nssm,
+        "len": cache["len"] + 1,
+    }

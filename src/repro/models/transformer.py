@@ -1,0 +1,477 @@
+"""Generic decoder-only transformer LM (dense / GQA / MoE / VLM-prefix).
+
+Covers llama4-scout, grok-1, starcoder2, mistral-nemo, llama3, olmo and the
+internvl2 LM backbone.  Layers are homogeneous and stacked along a leading
+'layer' axis, executed with ``lax.scan`` (small HLO => fast 512-device
+compiles) and per-layer ``jax.checkpoint`` remat.
+
+Every weight matmul goes through MF-MAC (core.mfmac) under the active
+QuantPolicy — the paper's Algorithm 1 applied to a modern LM stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mfmac
+from repro.core.policy import QuantPolicy
+from repro.models import common
+from repro.models.spec import ParamSpec
+from repro.parallel import actshard
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _linear(shape, axes, std, gamma_init=0.95):
+    # PRC gamma: one scalar per layer instance (stacked along 'layer').
+    if axes and axes[0] == "layer":
+        gshape, gaxes = (shape[0],), ("layer",)
+    else:
+        gshape, gaxes = (), ()
+    return {
+        "w": ParamSpec(shape, axes, std=std),
+        "gamma": ParamSpec(gshape, gaxes, init="value", value=gamma_init),
+    }
+
+
+def _norm_specs(cfg: ModelConfig, L: Optional[int] = None):
+    lead = () if L is None else (L,)
+    laxes = () if L is None else ("layer",)
+    if cfg.norm == "nonparam_ln":
+        return {}
+    out = {"scale": ParamSpec(lead + (cfg.d_model,), laxes + (None,), init="ones")}
+    if cfg.norm == "ln":
+        out["bias"] = ParamSpec(lead + (cfg.d_model,), laxes + (None,), init="zeros")
+    return out
+
+
+def _mlp_specs(cfg: ModelConfig, L: int, std: float):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": _linear((L, d, f), ("layer", "embed", "ffn"), std),
+            "wi_up": _linear((L, d, f), ("layer", "embed", "ffn"), std),
+            "wo": _linear((L, f, d), ("layer", "ffn", "embed"), std),
+        }
+    return {
+        "wi": _linear((L, d, f), ("layer", "embed", "ffn"), std),
+        "wo": _linear((L, f, d), ("layer", "ffn", "embed"), std),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, L: int, std: float):
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.num_experts
+    out = {
+        "router": _linear((L, d, e), ("layer", "embed", None), std),
+        "gate": _linear((L, e, d, f), ("layer", "expert", "embed", "ffn"), std),
+        "up": _linear((L, e, d, f), ("layer", "expert", "embed", "ffn"), std),
+        "down": _linear((L, e, f, d), ("layer", "expert", "ffn", "embed"), std),
+    }
+    if m.shared_expert:
+        out["shared"] = _mlp_specs(cfg, L, std)
+    return out
+
+
+def decoder_specs(cfg: ModelConfig):
+    L, d = cfg.n_layers, cfg.d_model
+    hd = cfg.head_dim
+    std = 0.02
+    layer = {
+        "ln1": _norm_specs(cfg, L),
+        "ln2": _norm_specs(cfg, L),
+        "wq": _linear((L, d, cfg.n_heads * hd), ("layer", "embed", "heads"), std),
+        "wk": _linear((L, d, cfg.kv_heads * hd), ("layer", "embed", "kv"), std),
+        "wv": _linear((L, d, cfg.kv_heads * hd), ("layer", "embed", "kv"), std),
+        "wo": _linear((L, cfg.n_heads * hd, d), ("layer", "heads", "embed"), std),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = _moe_specs(cfg, L, std)
+    else:
+        layer["mlp"] = _mlp_specs(cfg, L, std)
+    specs = {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), std=0.02),
+        "layers": layer,
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = _linear((d, cfg.vocab_padded), ("embed", "vocab"), std)
+    if cfg.family == "vlm" and cfg.num_patches:
+        specs["patch_proj"] = _linear(
+            (cfg.patch_dim, d), (None, "embed"), std
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _mlp_apply(cfg: ModelConfig, policy: QuantPolicy, p, x):
+    if cfg.act == "swiglu":
+        g = mfmac.mf_linear(x, p["wi_gate"]["w"], p["wi_gate"]["gamma"], policy=policy)
+        u = mfmac.mf_linear(x, p["wi_up"]["w"], p["wi_up"]["gamma"], policy=policy)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = common.gelu(
+            mfmac.mf_linear(x, p["wi"]["w"], p["wi"]["gamma"], policy=policy)
+        )
+    return mfmac.mf_linear(h, p["wo"]["w"], p["wo"]["gamma"], policy=policy)
+
+
+def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x, group_size: int = 512):
+    """GShard-style capacity dispatch; experts run via mf_expert_linear.
+
+    x: (B, S, D).  Tokens are flattened and regrouped into groups of
+    ``group_size`` so dispatch-einsum FLOPs stay ~O(tokens * group_size)
+    instead of O(tokens * seq_len) (DESIGN.md §4).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    t = min(group_size, n_tok)
+    g = n_tok // t
+    assert g * t == n_tok, (b, s, group_size)
+    xg = x.reshape(g, t, d)
+
+    router_logits = mfmac.mf_linear(
+        xg, p["router"]["w"], p["router"]["gamma"], policy=policy
+    ).astype(jnp.float32)  # (G, T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)  # (G, T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    e = m.num_experts
+    cap = int(t * m.top_k / e * m.capacity_factor)
+    cap = max(4, ((cap + 3) // 4) * 4)
+
+    # Flatten the k slot axis into the token axis (slot-major priority).
+    idx_flat = expert_idx.reshape(g, t * m.top_k)
+    gate_flat = gate_vals.reshape(g, t * m.top_k)
+    onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.float32)  # (G, T*k, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0  # position in expert
+    keep = (pos >= 0) & (pos < cap)
+    combine = (
+        gate_flat[..., None, None]
+        * keep[..., None].astype(jnp.float32)
+        * jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+    )  # (G, T*k, E, C)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # Token slots repeat x along k: (G, T*k, D).
+    xk = jnp.repeat(xg, m.top_k, axis=1) if m.top_k > 1 else xg
+    # expert_in: (E, G, C, D)
+    expert_in = jnp.einsum(
+        "gtec,gtd->egcd", dispatch, xk, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    ein = expert_in.reshape(e, g * cap, d)
+
+    def expert_ffn(name):
+        q = p[name]
+        return lambda h: mfmac.mf_expert_linear(h, q["w"], q["gamma"], policy=policy)
+
+    if cfg.act == "swiglu":
+        hg = expert_ffn("gate")(ein)
+        hu = expert_ffn("up")(ein)
+        h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    else:
+        h = common.gelu(expert_ffn("gate")(ein))
+    eout = expert_ffn("down")(h).reshape(e, g, cap, d)
+
+    out = jnp.einsum(
+        "egcd,gtec->gtd",
+        eout.astype(jnp.float32),
+        combine.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if m.top_k > 1:
+        out = out.reshape(g, t, m.top_k, d).sum(axis=2)
+    out = out.reshape(b, s, d)
+    if m.shared_expert:
+        out = out + _mlp_apply(cfg, policy, p["shared"], x)
+    return out
+
+
+def _attn_apply(
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    p,
+    x,
+    qpos,
+    *,
+    cache_kv=None,  # (k, v, kpos) for decode
+    window=None,
+):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = mfmac.mf_linear(x, p["wq"]["w"], p["wq"]["gamma"], policy=policy)
+    k = mfmac.mf_linear(x, p["wk"]["w"], p["wk"]["gamma"], policy=policy)
+    v = mfmac.mf_linear(x, p["wv"]["w"], p["wv"]["gamma"], policy=policy)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.kv_heads, hd)
+    v = v.reshape(b, s, cfg.kv_heads, hd)
+    qp = jnp.broadcast_to(qpos[None, :], (b, s))
+    q = common.rope(q, qp, cfg.rope_theta)
+    k = common.rope(k, qp, cfg.rope_theta)
+    new_kv = (k, v)
+    if cache_kv is not None:
+        k, v, kpos = cache_kv  # pre-updated by caller; kpos (Skv,)
+    else:
+        kpos = qpos
+    att = _sdpa(cfg, policy, q, k, v, qpos, kpos, window)
+    att = att.reshape(b, s, cfg.n_heads * hd)
+    out = mfmac.mf_linear(att, p["wo"]["w"], p["wo"]["gamma"], policy=policy)
+    return out, new_kv
+
+
+def _sdpa(cfg, policy, q, k, v, qpos, kpos, window):
+    """Grouped-GQA attention: K/V stay at native kv-head width.
+
+    Materializing the GQA-expanded K/V (common._expand_kv) costs
+    (H/KV) x cache bytes per layer — 6x for grok-1 — and at decode forces
+    full-cache reshard copies when KV doesn't divide the model axis
+    (EXPERIMENTS.md §Perf decode iteration).  The grouped einsum keeps
+    K/V as (B, S, KV, hd) and folds the head-repeat factor into Q.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    kv = k.shape[2]
+    rep = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # q: (B, KV, rep, Sq, hd); k,v transposed to (B, KV, Skv, hd)
+    qg = jnp.transpose(q.reshape(b, sq, kv, rep, hd), (0, 2, 3, 1, 4))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    scores = (
+        mfmac.mf_act_dot(
+            qg, kt, (((4,), (3,)), ((0, 1), (0, 1))), policy=policy
+        ).astype(jnp.float32)
+        * scale
+    )  # (B, KV, rep, Sq, Skv)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask &= kpos[None, :] >= 0  # ring-cache slots not yet written
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = mfmac.mf_act_dot(
+        probs.astype(q.dtype), vt,
+        (((4,), (2,)), ((0, 1), (0, 1))), policy=policy,
+    )  # (B, KV, rep, Sq, hd)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _block(cfg, policy, p, x, qpos, cache_kv=None):
+    h = common.apply_norm(cfg.norm, x, p["ln1"])
+    att, new_kv = _attn_apply(
+        cfg, policy, p, h, qpos, cache_kv=cache_kv, window=cfg.window
+    )
+    # Pin the row-parallel projection output back to the seq-sharded
+    # layout BEFORE the residual add: turns the TP partial-sum all-reduce
+    # into a reduce-scatter (Megatron-SP style; EXPERIMENTS.md §Perf it.2).
+    x = x + actshard.shard_tokens(att)
+    h2 = common.apply_norm(cfg.norm, x, p["ln2"])
+    if cfg.moe is not None:
+        x = x + actshard.shard_tokens(_moe_apply(cfg, policy, p["moe"], h2))
+    else:
+        x = x + actshard.shard_tokens(_mlp_apply(cfg, policy, p["mlp"], h2))
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, policy, params, tokens, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pp = params["patch_proj"]
+        pe = mfmac.mf_linear(
+            patch_embeds.astype(jnp.float32), pp["w"], pp["gamma"], policy=policy
+        ).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence forward. Returns logits (B, S_total, V_padded)."""
+    x = embed_inputs(cfg, policy, params, tokens, patch_embeds)
+    x = actshard.shard_tokens(x)
+    s_total = x.shape[1]
+    qpos = jax.lax.iota(jnp.int32, s_total)
+
+    def body(carry, lp):
+        y, kv = _block(cfg, policy, lp, carry, qpos)
+        y = actshard.shard_tokens(y)
+        return y, (kv if return_kv else None)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    x = common.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = _lm_head(cfg, policy, params, x)
+    if return_kv:
+        return logits, kvs
+    return logits
+
+
+def _lm_head(cfg, policy, params, x):
+    if cfg.tie_embeddings:
+        # Tied head: x @ E^T — quantized with 6-bit last-layer G (App. D).
+        # The embedding table is never pre-quantized (lookups use raw
+        # values), so force quantize-at-use here.
+        if policy.weights_prequantized:
+            import dataclasses as _dc
+
+            pol = _dc.replace(policy, weights_prequantized=False)
+        else:
+            pol = policy
+        w = params["embed"].T
+        return mfmac.mf_linear(
+            x, w, jnp.float32(policy.ratio_clip_init or 1.0),
+            policy=pol, is_last=True,
+        )
+    hp = params["lm_head"]
+    return mfmac.mf_linear(
+        x, hp["w"], hp["gamma"], policy=policy, is_last=True
+    )
+
+
+def lm_loss(cfg, policy, params, tokens, labels, loss_mask, patch_embeds=None):
+    """Mean next-token cross entropy; padded-vocab ids are masked out."""
+    logits = forward(cfg, policy, params, tokens, patch_embeds=patch_embeds)
+    if patch_embeds is not None:
+        logits = logits[:, patch_embeds.shape[1]:, :]
+    logits = logits.astype(jnp.float32)
+    vpad = cfg.vocab_padded
+    if vpad != cfg.vocab:
+        invalid = jax.lax.iota(jnp.int32, vpad) >= cfg.vocab
+        logits = jnp.where(invalid[None, None, :], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+# --- decode ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Ring KV cache. window caps the live span for sliding-window archs."""
+    span = min(max_len, cfg.window) if cfg.window else max_len
+    L, kv, hd = cfg.n_layers, cfg.kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, span, kv, hd), dtype),
+        "v": jnp.zeros((L, batch, span, kv, hd), dtype),
+        "pos": jnp.full((span,), -1, jnp.int32),  # global pos per slot
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, policy, params, tokens, cache, patch_embeds=None):
+    """Run the prompt through the model, filling the cache; returns logits
+    of the last position and the updated cache."""
+    logits, kvs = forward(
+        cfg, policy, params, tokens, patch_embeds=patch_embeds,
+        remat=False, return_kv=True,
+    )
+    ks, vs = kvs  # (L, B, S, KV, hd)
+    s = ks.shape[2]
+    span = cache["k"].shape[2]
+    take = min(s, span)
+    ks_t = ks[:, :, s - take:, :, :].astype(cache["k"].dtype)
+    vs_t = vs[:, :, s - take:, :, :].astype(cache["v"].dtype)
+    pos = jnp.arange(s - take, s, dtype=jnp.int32)
+    cache = dict(cache)
+    if take == span:
+        # Ring layout: global position p lives in slot p % span.
+        shift = s % span
+        cache["k"] = jnp.roll(ks_t, shift, axis=2)
+        cache["v"] = jnp.roll(vs_t, shift, axis=2)
+        cache["pos"] = jnp.roll(pos, shift)
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ks_t, (0, 0, 0, 0, 0)
+        )
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vs_t, (0, 0, 0, 0, 0)
+        )
+        cache["pos"] = jax.lax.dynamic_update_slice(cache["pos"], pos, (0,))
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1, :], cache
+
+
+def decode_step(cfg, policy, params, token, cache):
+    """One decode step.  token: (B,) int32 -> (logits (B, V), new cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    pos = cache["len"]
+    span = cache["k"].shape[2]
+    slot = pos % span
+    qpos = pos[None].astype(jnp.int32)  # (1,)
+
+    def carry_block(carry, lp_kv):
+        lp, ck, cv = lp_kv
+        h = common.apply_norm(cfg.norm, carry, lp["ln1"])
+        # project new token
+        q = mfmac.mf_linear(h, lp["wq"]["w"], lp["wq"]["gamma"], policy=policy)
+        k = mfmac.mf_linear(h, lp["wk"]["w"], lp["wk"]["gamma"], policy=policy)
+        v = mfmac.mf_linear(h, lp["wv"]["w"], lp["wv"]["gamma"], policy=policy)
+        q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
+        v = v.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
+        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
+        q = common.rope(q, pq, cfg.rope_theta)
+        k = common.rope(k, pq, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, slot, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, slot, 0, 0)
+        )
+        att = _sdpa(
+            cfg, policy, q, ck.astype(q.dtype), cv.astype(q.dtype),
+            qpos, kpos_new, cfg.window,
+        )
+        att = att.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        y = carry + mfmac.mf_linear(
+            att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
+        )
+        h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
+        if cfg.moe is not None:
+            y = y + _moe_apply(cfg, policy, lp["moe"], h2, group_size=b)
+        else:
+            y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
+        return y, (ck, cv)
+
+    kpos_new = jax.lax.dynamic_update_slice(
+        cache["pos"], pos[None], (slot,)
+    )
+    x, (nk, nv) = jax.lax.scan(
+        carry_block, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = common.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = _lm_head(cfg, policy, params, x)[:, 0, :]
+    new_cache = {
+        "k": nk,
+        "v": nv,
+        "pos": kpos_new,
+        "len": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    sgd_momentum,
+    adamw,
+    clip_by_global_norm,
+    step_decay_schedule,
+    warmup_cosine_schedule,
+)

@@ -1,0 +1,116 @@
+"""Optimizers, from scratch (no optax here).
+
+The paper trains CNNs with SGD+momentum and the Transformer with the
+original Adam recipe; both are provided.  Master weights and optimizer
+state are FP32 (the paper's setting) — only linear-layer MACs are
+quantized, the update itself is full precision.
+
+An Optimizer is a pair of pure functions, pytree-shaped like the params:
+  init(params) -> state
+  update(grads, state, params, step) -> (new_params, new_state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def step_decay_schedule(base_lr: float, boundaries, factor: float = 0.1):
+    """Paper Appendix D: step decay at epoch boundaries."""
+    bs = jnp.asarray(boundaries)
+
+    def lr(step):
+        n = jnp.sum(step >= bs)
+        return base_lr * factor ** n
+
+    return lr
+
+
+def warmup_cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def sgd_momentum(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0):
+    def init(params):
+        return {
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def mu_upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p
+            return momentum * mu + g
+
+        new_mu = jax.tree_util.tree_map(mu_upd, grads, state["mu"], params)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - lr * m, params, new_mu
+        )
+        return new_params, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        new_m = jax.tree_util.tree_map(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            grads, state["m"],
+        )
+        new_v = jax.tree_util.tree_map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["v"],
+        )
+
+        def p_upd(p, m, v):
+            delta = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p
+            return p - lr * delta
+
+        new_params = jax.tree_util.tree_map(p_upd, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)

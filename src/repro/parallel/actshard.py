@@ -1,0 +1,65 @@
+"""Activation sharding constraints at layer boundaries.
+
+The SPMD partitioner only has fixed points at jit in/out shardings and
+explicit ``with_sharding_constraint``s; for deep scanned models it can
+(and, observed in the dry-run HLO, does) drop the DP batch sharding when
+propagating through the microbatch reshape — silently replicating the
+whole layer stack.  Production frameworks pin activations at every block
+boundary; we do the same.
+
+The mesh is threaded via a module-level context (set by the launcher /
+dry-run around tracing) so model code stays mesh-agnostic:
+
+    with actshard.use_mesh(mesh):
+        lowered = jax.jit(step).lower(...)
+
+Inside model code, ``shard_tokens`` pins (B, S, ...) activations to
+(batch -> FSDP axes, seq -> 'model'); no-op when no mesh is active (CPU
+tests) or when a dim doesn't divide.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_tokens(x: jax.Array, *, seq_dim: int = 1) -> jax.Array:
+    """Constrain a (B, S, ...) activation: B->fsdp, S->'model'."""
+    mesh = _ACTIVE
+    if mesh is None or x.ndim < 2:
+        return x
+    fa = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ma = "model" if "model" in mesh.axis_names else None
+    entries = [None] * x.ndim
+    if fa and x.shape[0] % _axis_size(mesh, fa) == 0:
+        entries[0] = fa if len(fa) > 1 else fa[0]
+    if ma and seq_dim < x.ndim and x.shape[seq_dim] % mesh.shape[ma] == 0:
+        entries[seq_dim] = ma
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )

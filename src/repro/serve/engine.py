@@ -1,0 +1,56 @@
+"""Batched serving engine: prefill + decode steps over the registry API.
+
+``serve_step`` for the dry-run is the single-token decode step with a full
+KV cache of ``seq_len`` — exactly the assignment's ``decode_*`` semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.models import registry
+
+
+def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy):
+    def prefill_step(params, batch, cache):
+        return registry.prefill(cfg, policy, params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *, greedy=True):
+    def decode_step(params, token, cache):
+        logits, cache = registry.decode_step(cfg, policy, params, token, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step
+
+
+def generate(
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    params,
+    batch,
+    *,
+    max_new_tokens: int,
+    max_len: int,
+    cache_dtype=jnp.bfloat16,
+):
+    """Greedy generation driver (used by examples/tests; python loop)."""
+    b = batch["tokens"].shape[0]
+    cache = registry.init_cache(cfg, b, max_len, cache_dtype)
+    logits, cache = registry.prefill(cfg, policy, params, batch, cache)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    step = jax.jit(
+        lambda p, t, c: registry.decode_step(cfg, policy, p, t, c),
+        static_argnums=(),
+    )
+    for _ in range(max_new_tokens - 1):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

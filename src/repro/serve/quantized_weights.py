@@ -1,0 +1,81 @@
+"""Serving-side weight compression (beyond paper; EXPERIMENTS.md §Perf).
+
+Decode is weight-bandwidth-bound (the roofline memory term is dominated
+by streaming every parameter per generated token).  Because the serving
+weights are ALS-PoTQ 5-bit PoT values, they are **exactly** representable
+in bf16 — so the HBM copy can be half width with zero numeric change:
+
+    params_q = quantize_for_serving(cfg, policy, params)
+
+applies WBC + ALS-PoTQ to every linear-layer weight ONCE (exactly what
+mf_linear's forward would do per step) and stores the result in bf16.
+mf_linear re-quantizes at use — idempotent on PoT values — so the serve
+path needs no model changes, and the weight-read term halves.
+
+``pack_int8`` goes further for offline storage/transfer: one int8 code
+per element (sign+exponent packed, core/compress.py layout) + per-tensor
+beta — 4x smaller than FP32 checkpoints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mfmac, potq
+from repro.core.policy import QuantPolicy
+from repro.models import spec as pspec
+
+
+def _is_linear_weight(path) -> bool:
+    # linear weights live under {'w': ...} dicts built by the _linear
+    # helpers; embedding/norm/conv/scalars are left in f32.
+    keys = [str(getattr(p, "key", "")) for p in path]
+    return bool(keys) and keys[-1] == "w"
+
+
+def quantize_for_serving(cfg, policy: QuantPolicy, params):
+    """PoT-quantize every linear weight and store it at bf16 (exact)."""
+
+    def one(path, x):
+        if not _is_linear_weight(path) or x.ndim < 2:
+            return x
+        # one scale per trailing 2-D matrix: (L,D,F)->per-layer,
+        # (L,E,D,F)->per-(layer,expert) — matches mf_linear/mf_expert use
+        axes = tuple(range(x.ndim - 2, x.ndim)) if x.ndim > 2 else None
+        return mfmac._quantize_w(x, policy, axes).astype(jnp.bfloat16)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def pack_int8(params, bits: int = 5):
+    """Offline int8 packing of linear weights: (codes, beta) per tensor."""
+    emax = potq.pot_emax(bits)
+
+    def one(path, x):
+        if not _is_linear_weight(path) or x.ndim < 2:
+            return x
+        enc = potq.pot_encode(jnp.asarray(x, jnp.float32), bits)
+        mag = jnp.where(
+            enc.exp == potq.EXP_ZERO, 0, enc.exp.astype(jnp.int32) + emax + 1
+        )
+        code = jnp.where(enc.sign == 1, -mag, mag).astype(jnp.int8)
+        return {"code": code, "beta": enc.beta}
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def unpack_int8(packed, bits: int = 5):
+    emax = potq.pot_emax(bits)
+
+    def one(x):
+        if isinstance(x, dict) and "code" in x:
+            mag = jnp.abs(x["code"].astype(jnp.int32))
+            exp = mag - (emax + 1) + x["beta"]
+            val = potq.exp2i(jnp.where(mag == 0, 0, exp))
+            val = jnp.where(mag == 0, 0.0, val)
+            return jnp.where(x["code"] < 0, -val, val).astype(jnp.bfloat16)
+        return x
+
+    return jax.tree_util.tree_map(
+        one, packed, is_leaf=lambda x: isinstance(x, dict) and "code" in x
+    )

@@ -1,0 +1,144 @@
+"""Training step: microbatched gradient accumulation + optimizer update.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with the shardings from repro.parallel.sharding.
+
+Microbatching is a ``lax.scan`` over the leading batch split, which bounds
+live activation memory (the grok-1/internvl cells need it to fit
+16 GB/chip — DESIGN.md §4); remat is inside the model forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.models import registry
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    clip_norm: Optional[float] = 1.0
+    # beyond-paper: PoT-compress the DP gradient all-reduce (see
+    # core/compress.py; accounted in benchmarks/roofline.py)
+    grad_compression: bool = False
+    # Quantize every linear weight ONCE per step (WBC + ALS-PoTQ, bf16
+    # shadow) outside the layer scan, and train the FP32 masters through
+    # the STE — numerically identical to Algorithm 1 (which reuses the
+    # same Wq for the whole step anyway), but the FSDP gathers inside the
+    # scan then move exact 2-byte PoT values instead of raw FP32, and the
+    # quantizer runs once per step instead of once per microbatch.
+    # EXPERIMENTS.md §Perf (grok train iteration).
+    weight_shadow: bool = True
+
+
+def _quantize_shadow(params, policy):
+    """WBC + ALS-PoTQ every linear weight to a bf16 shadow (exact PoT)."""
+    from repro.core import mfmac
+
+    def one(path, x):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if not keys or keys[-1] != "w" or x.ndim < 2:
+            return x
+        axes = tuple(range(x.ndim - 2, x.ndim)) if x.ndim > 2 else None
+        return mfmac._quantize_w(x, policy, axes)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _split_micro(batch, m: int, mesh=None):
+    """(B, ...) -> (m, B/m, ...) with the batch sharding RE-ASSERTED.
+
+    Without the explicit constraint the SPMD partitioner can fail to
+    propagate the DP sharding through the reshape (m rarely divides the
+    data axis) and silently replicates the entire layer stack — observed
+    as a 16x flops blow-up in the dry-run HLO.  See EXPERIMENTS.md §Perf.
+    """
+    from repro.parallel import sharding as shd
+
+    def r(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        y = x.reshape(m, b // m, *x.shape[1:])
+        if mesh is not None:
+            ps = shd.batch_pspec(
+                mesh, 1, 2 if y.ndim > 2 else None, y.ndim,
+                batch_size=b // m,
+                seq_len=y.shape[2] if y.ndim > 2 else None,
+            )
+            y = shd.constrain(y, mesh, ps)
+        return y
+
+    return jax.tree_util.tree_map(r, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    optimizer: Optimizer,
+    tc: TrainConfig = TrainConfig(),
+    mesh=None,
+):
+    use_shadow = tc.weight_shadow and policy.enabled
+    loss_policy = (
+        dataclasses.replace(policy, weights_prequantized=True)
+        if use_shadow
+        else policy
+    )
+
+    def loss_fn(params, micro):
+        return registry.loss_fn(cfg, loss_policy, params, micro)
+
+    def train_step(params, opt_state, batch, step):
+        master = params
+        if use_shadow:
+            params = _quantize_shadow(params, policy)
+        m = tc.microbatches
+        if m > 1:
+            micros = _split_micro(batch, m, mesh)
+
+            def acc(carry, micro):
+                loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+                carry_loss, carry_grads = carry
+                carry_grads = jax.tree_util.tree_map(
+                    jnp.add, carry_grads, grads
+                )
+                return (carry_loss + loss, carry_grads), None
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc, (jnp.float32(0.0), zero_grads), micros
+            )
+            loss = loss_sum / m
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if tc.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        else:
+            _, gnorm = clip_by_global_norm(grads, jnp.inf)
+        # STE: gradients taken w.r.t. the quantized shadow update the FP32
+        # masters (paper Algorithm 1 line 17).
+        new_params, new_opt = optimizer.update(grads, opt_state, master, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_state_specs(specs_tree, optimizer: Optimizer):
+    """Abstract optimizer state built from param ShapeDtypeStructs."""
+    from repro.models import spec as pspec
+
+    abstract_params = pspec.abstract(specs_tree)
+    return jax.eval_shape(optimizer.init, abstract_params)

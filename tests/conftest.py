@@ -1,0 +1,7 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device; only launch/dryrun.py uses 512.
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,73 @@
+"""Unit tests for the loop-weighted HLO cost analyzer (repro.analysis)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import analyze_hlo
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_weighting():
+    """A scan of N matmuls must report N x the flops of one (this is the
+    exact failure mode of compiled.cost_analysis())."""
+    x = jnp.ones((128, 128))
+
+    def one(x):
+        return x @ x
+
+    def scan10(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)
+        return y
+
+    f1 = analyze_hlo(_hlo(one, x))["flops"]
+    f10 = analyze_hlo(_hlo(scan10, x))["flops"]
+    expected = 2 * 128**3
+    assert abs(f1 - expected) / expected < 0.01, f1
+    assert abs(f10 - 10 * expected) / (10 * expected) < 0.01, f10
+
+
+def test_dot_flops_with_batch_dims():
+    a = jnp.ones((4, 64, 32))
+    b = jnp.ones((4, 32, 16))
+
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((2,), (1,)), ((0,), (0,))))
+
+    fl = analyze_hlo(_hlo(f, a, b))["flops"]
+    expected = 2 * 4 * 64 * 32 * 16
+    assert abs(fl - expected) / expected < 0.01, fl
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.ones((1024, 1024))
+    fl = analyze_hlo(_hlo(lambda x: x * 2 + 1, x))
+    # one read + one write of 4 MiB, modulo fusion bookkeeping
+    assert 0.5 * 8e6 < fl["hbm_bytes"] < 4 * 8e6, fl["hbm_bytes"]
+
+
+def test_nested_scan_multiplies():
+    x = jnp.ones((64, 64))
+
+    def inner(c, _):
+        return c @ c, None
+
+    def outer(c, _):
+        y, _ = jax.lax.scan(inner, c, None, length=3)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    fl = analyze_hlo(_hlo(f, x))["flops"]
+    expected = 15 * 2 * 64**3
+    assert abs(fl - expected) / expected < 0.01, fl
+
+
+def test_no_collectives_on_single_device():
+    x = jnp.ones((256, 256))
+    r = analyze_hlo(_hlo(lambda x: x @ x, x))
+    assert r["collective_bytes"] == 0

@@ -1,0 +1,90 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 128, 128),
+    (100, 200, 150),   # ragged: exercises padding
+    (256, 256, 256),
+    (1, 512, 128),
+    (300, 64, 640),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_potq_matmul_matches_ref(m, k, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + n), 2)
+    a = (jax.random.normal(k1, (m, k)) * 1.3).astype(dtype)
+    w = (jax.random.normal(k2, (k, n)) * 0.07).astype(dtype)
+    wm = jnp.mean(w.astype(jnp.float32))
+    ct = jnp.max(jnp.abs(a.astype(jnp.float32))) * 0.95
+    out = ops.potq_matmul(a, w, w_mean=wm, clip_t=ct, interpret=True)
+    oref = ref.potq_matmul_ref(a, w, w_mean=wm, clip_t=ct)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+def test_potq_matmul_no_preproc(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0), 2)
+    a = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    out = ops.potq_matmul(a, w, interpret=True)
+    oref = ref.potq_matmul_ref(a, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), rtol=0)
+
+
+@pytest.mark.parametrize("bits", [4, 5, 6])
+def test_potq_matmul_bitwidths(bits):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1), 2)
+    a = jax.random.normal(k1, (64, 256))
+    w = jax.random.normal(k2, (256, 64))
+    out = ops.potq_matmul(a, w, bits_a=bits, bits_w=bits, interpret=True)
+    oref = ref.potq_matmul_ref(a, w, bits_a=bits, bits_w=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), rtol=0)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_pot_value_matmul_matches_ref(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3), 2)
+    from repro.core import potq
+
+    x = potq.pot_quantize(jax.random.normal(k1, (m, k)), 5)
+    y = potq.pot_quantize(jax.random.normal(k2, (k, n)) * 0.1, 5)
+    out = ops.pot_value_matmul(x, y, interpret=True)
+    oref = ref.pot_value_matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), rtol=0)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (16, 256, 128)])
+def test_block_shape_invariance(bm, bn, bk):
+    """Output must not depend on the BlockSpec tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4), 2)
+    a = jax.random.normal(k1, (64, 256))
+    w = jax.random.normal(k2, (256, 256))
+    base = ops.potq_matmul(a, w, interpret=True)
+    tiled = ops.potq_matmul(a, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), rtol=0)
+
+
+def test_zero_inputs():
+    a = jnp.zeros((16, 128))
+    w = jnp.zeros((128, 128))
+    out = ops.potq_matmul(a, w, interpret=True)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_extreme_dynamic_range():
+    """Gradients span ~2^-30..2^-10: layer-wise scaling must absorb it."""
+    k = jax.random.PRNGKey(5)
+    g = jax.random.normal(k, (32, 128)) * 1e-7
+    w = jax.random.normal(jax.random.PRNGKey(6), (128, 64)) * 2e4
+    out = ops.potq_matmul(g, w, interpret=True)
+    oref = ref.potq_matmul_ref(g, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), rtol=0)
+    assert np.all(np.isfinite(np.asarray(out)))

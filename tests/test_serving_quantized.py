@@ -1,0 +1,72 @@
+"""Quantized-weight serving (serve/quantized_weights.py) + encode kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.configs.base import ShapeConfig
+from repro.core import compress, potq
+from repro.core.policy import PAPER_FAITHFUL
+from repro.data import pipeline
+from repro.kernels import ops
+from repro.models import registry, spec as pspec
+from repro.serve import quantized_weights as qw
+
+SERVE_POL = dataclasses.replace(PAPER_FAITHFUL, weights_prequantized=True)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "grok-1-314b", "whisper-large-v3"])
+def test_serving_bit_identical(arch):
+    cfg = C.smoke_config(arch)
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    params_q = qw.quantize_for_serving(cfg, PAPER_FAITHFUL, params)
+    batch = pipeline.make_batch(cfg, ShapeConfig("t", 16, 2, "decode"), 0)
+    req = {k: v for k, v in batch.items() if k in ("tokens", "frames", "patch_embeds")}
+    c1 = registry.init_cache(cfg, 2, 32)
+    c2 = registry.init_cache(cfg, 2, 32)
+    l1, c1 = registry.prefill(cfg, PAPER_FAITHFUL, params, req, c1)
+    l2, c2 = registry.prefill(cfg, SERVE_POL, params_q, req, c2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    t1, t2 = jnp.argmax(l1, -1), jnp.argmax(l2, -1)
+    d1, c1 = registry.decode_step(cfg, PAPER_FAITHFUL, params, t1, c1)
+    d2, c2 = registry.decode_step(cfg, SERVE_POL, params_q, t2, c2)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_serving_weights_are_bf16_pot():
+    cfg = C.smoke_config("llama3-8b")
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    params_q = qw.quantize_for_serving(cfg, PAPER_FAITHFUL, params)
+    w = np.asarray(params_q["layers"]["wq"]["w"], np.float64)
+    assert params_q["layers"]["wq"]["w"].dtype == jnp.bfloat16
+    nz = w[w != 0]
+    l = np.log2(np.abs(nz))
+    assert np.all(l == np.round(l))  # exact PoT even after bf16 storage
+    # embedding stays full precision (lookups + tied-head re-quantize)
+    assert params_q["embed"].dtype == jnp.float32
+
+
+def test_int8_pack_roundtrip_matches_serving():
+    cfg = C.smoke_config("olmo-1b")
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    packed = qw.pack_int8(params)
+    unpacked = qw.unpack_int8(packed)
+    # unpack == quantize (without WBC, pack_int8 encodes raw weights)
+    w0 = params["layers"]["wq"]["w"]
+    ref = potq.pot_quantize(w0, 5)
+    np.testing.assert_array_equal(
+        np.asarray(unpacked["layers"]["wq"]["w"], np.float32), np.asarray(ref)
+    )
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (100, 300), (7, 1000)])
+@pytest.mark.parametrize("bits", [4, 5, 6])
+def test_encode_kernel_vs_oracle(shape, bits):
+    g = jax.random.normal(jax.random.PRNGKey(shape[0] + bits), shape) * 1e-3
+    codes, beta = ops.potq_encode(g, bits=bits, interpret=True)
+    dec = compress.decompress(codes, beta, bits=bits)
+    ref = potq.pot_quantize(g, bits, beta)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref))

@@ -1,0 +1,80 @@
+"""Integration: multiplication-free training actually learns (proxy for
+the paper's Tables 3/4 at CPU scale), and the Table-5 ablation ordering."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as C
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import FP32_BASELINE, PAPER_FAITHFUL, QuantPolicy
+from repro.data import pipeline
+from repro.models import registry, spec as pspec
+from repro.optim import adamw, warmup_cosine_schedule
+from repro.train import TrainConfig, make_train_step
+
+CFG = ModelConfig(
+    name="conv-test", family="decoder", n_layers=2, d_model=64, n_heads=4,
+    kv_heads=2, d_ff=128, vocab=64, head_dim=16, vocab_pad_multiple=64,
+)
+SHAPE = ShapeConfig("t", 64, 8, "train")
+
+
+def run_training(policy: QuantPolicy, steps: int = 30, lr=3e-3):
+    specs = registry.param_specs(CFG)
+    params = pspec.materialize(specs, jax.random.PRNGKey(0))
+    opt = adamw(warmup_cosine_schedule(lr, 5, steps))
+    tstep = jax.jit(make_train_step(CFG, policy, opt, TrainConfig()))
+    opt_state = opt.init(params)
+    losses = []
+    for step in range(steps):
+        batch = pipeline.make_batch(CFG, SHAPE, step)
+        params, opt_state, m = tstep(params, opt_state, batch, jnp.int32(step))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+@pytest.mark.slow
+def test_fp32_and_potq_both_learn():
+    fp32 = run_training(FP32_BASELINE)
+    potq = run_training(PAPER_FAITHFUL)
+    # both fit the synthetic induction structure (clear monotone progress)
+    assert fp32[-1] < fp32[0] - 0.4, fp32
+    assert potq[-1] < potq[0] - 0.4, potq
+    # paper claim at proxy scale: quantized training tracks FP32 closely
+    assert potq[-1] < fp32[-1] + 0.7, (potq[-1], fp32[-1])
+
+
+@pytest.mark.slow
+def test_no_als_collapses():
+    """Table 5: without layer-wise scaling (alpha=1) training collapses —
+    gradients with max|G| << 2^-7 quantize to all-zeros."""
+    from repro.core import potq as P
+
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 1e-5
+    q_no_als = P.pot_quantize(g, 5, beta=jnp.int32(0))  # fixed alpha = 1
+    assert float(jnp.sum(jnp.abs(q_no_als))) == 0.0  # all gradients dead
+    q_als = P.pot_quantize(g, 5)  # adaptive beta
+    assert float(jnp.sum(jnp.abs(q_als))) > 0.0
+
+
+@pytest.mark.slow
+def test_microbatch_equivalence():
+    """Grad accumulation must match the single-batch gradient (fp32)."""
+    specs = registry.param_specs(CFG)
+    params = pspec.materialize(specs, jax.random.PRNGKey(0))
+    opt = adamw(warmup_cosine_schedule(1e-3, 1, 10))
+    batch = pipeline.make_batch(CFG, SHAPE, 0)
+    s1 = jax.jit(make_train_step(CFG, FP32_BASELINE, opt, TrainConfig(microbatches=1)))
+    s4 = jax.jit(make_train_step(CFG, FP32_BASELINE, opt, TrainConfig(microbatches=4)))
+    p1, _, m1 = s1(params, opt.init(params), batch, jnp.int32(0))
+    p4, _, m4 = s4(params, opt.init(params), batch, jnp.int32(0))
+    # losses may differ (per-micro mean of masked means); grads & params
+    # agree because every microbatch has identical mask counts here
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4
+    )
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-5, max(
+        jax.tree_util.tree_leaves(d)
+    )
