@@ -100,7 +100,6 @@ def _parse(text: str) -> Dict[str, List[_Inst]]:
 def _operand_names(rest: str) -> List[str]:
     # operands are at the start of rest, up to the matching ')'
     depth = 1
-    out = []
     cur = ""
     for ch in rest:
         if ch == "(":
@@ -111,11 +110,10 @@ def _operand_names(rest: str) -> List[str]:
                 break
         cur += ch
     cur = re.sub(r"/\*[^*]*\*/", "", cur)
-    for tok in cur.split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
-    return out
+    # Operands look like "f32[128,128]{1,0} %name" — the layout braces
+    # contain commas, so a comma-split mangles every typed operand; pull
+    # the %names directly instead.
+    return re.findall(r"%([\w.\-]+)", cur)
 
 
 def _dot_flops(inst: _Inst, symbols: Dict[str, str]) -> float:

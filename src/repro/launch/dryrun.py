@@ -28,15 +28,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs as C
 from repro.core import policy as policy_lib
 from repro.data import pipeline
-from repro.launch.mesh import make_production_mesh
-from repro.models import registry, spec as pspec
+from repro.models import registry
 from repro.optim import sgd_momentum, step_decay_schedule
-from repro.parallel import actshard, sharding as shd
+from repro.parallel import actshard, meshes, planner
 from repro.train import TrainConfig, make_train_step
 
 # Per-arch microbatch counts for train_4k (global_batch=256); chosen so the
@@ -101,37 +99,33 @@ def collective_stats(hlo_text: str):
 
 
 def build_train_lowering(cfg, shape, mesh, policy, microbatches=None):
-    specs = registry.param_specs(cfg)
-    abstract_params = pspec.abstract(specs)
-    param_ps = shd.param_pspecs(specs, mesh)
+    plan = planner.plan_for(cfg, mesh, shape=shape)
+    abstract_params = plan.abstract_params()
     opt = sgd_momentum(step_decay_schedule(0.1, [30000, 60000, 90000]))
     abstract_opt = jax.eval_shape(opt.init, abstract_params)
-    # optimizer state mirrors params: momentum leaf i shares param i's spec
-    opt_ps = {"mu": param_ps}
     m = microbatches or MICROBATCHES.get(cfg.name, DEFAULT_MICRO)
-    if shape.global_batch % m or (shape.global_batch // m) % _fsdp(mesh):
+    if shape.global_batch % m or (shape.global_batch // m) % plan.fsdp_size():
         m = 1
     tstep = make_train_step(
         cfg, policy, opt, TrainConfig(microbatches=m, clip_norm=1.0), mesh=mesh
     )
     batch_sds = pipeline.batch_specs(cfg, shape)
-    batch_ps = shd.data_pspecs(mesh, batch_sds)
+    param_sh = plan.param_shardings()
     in_shardings = (
-        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), param_ps),
-        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), opt_ps),
-        jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), batch_ps),
-        NamedSharding(mesh, P()),
+        param_sh,
+        # optimizer state mirrors params: momentum leaf i shares param i's spec
+        {"mu": param_sh},
+        plan.data_shardings(),
+        plan.replicated(),
     )
     out_shardings = (
         in_shardings[0],
         in_shardings[1],
-        jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), {
-            "loss": 0, "grad_norm": 0, "step": 0,
-        }),
+        {k: plan.replicated() for k in ("loss", "grad_norm", "step")},
     )
     step_sds = jax.ShapeDtypeStruct((), jnp.int32)
     jitted = jax.jit(tstep, in_shardings=in_shardings, out_shardings=out_shardings)
-    with mesh, actshard.use_mesh(mesh):
+    with mesh, actshard.use_plan(plan):
         lowered = jitted.lower(abstract_params, abstract_opt, batch_sds, step_sds)
     return lowered, {"microbatches": m}
 
@@ -145,12 +139,9 @@ def build_serve_lowering(cfg, shape, mesh, policy, quantized_weights=False):
     import dataclasses as _dc
 
     b = shape.global_batch
-    abstract_cache = jax.eval_shape(
-        lambda: registry.init_cache(cfg, b, shape.seq_len)
-    )
-    cache_ps = shd.cache_pspecs(mesh, abstract_cache)
-    specs = registry.param_specs(cfg)
-    abstract_params = pspec.abstract(specs)
+    plan = planner.plan_for(cfg, mesh, shape=shape)
+    abstract_cache = plan.cache_abstract
+    abstract_params = plan.abstract_params()
     if quantized_weights:
         policy = _dc.replace(policy, weights_prequantized=True)
 
@@ -163,26 +154,24 @@ def build_serve_lowering(cfg, shape, mesh, policy, quantized_weights=False):
         abstract_params = jax.tree_util.tree_map_with_path(
             _to_bf16, abstract_params
         )
-    param_ps = shd.param_pspecs(specs, mesh)
     tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
-    tok_ps = shd.batch_pspec(mesh, 0, None, 1, batch_size=b, seq_len=None)
 
     def serve_step(params, token, cache):
         return registry.decode_step(cfg, policy, params, token, cache)
 
-    ns = lambda p: NamedSharding(mesh, p)
+    cache_sh = plan.cache_shardings()
     in_shardings = (
-        jax.tree_util.tree_map(ns, param_ps),
-        ns(tok_ps),
-        jax.tree_util.tree_map(ns, cache_ps),
+        plan.param_shardings(),
+        plan.named(plan.token_pspec(b)),
+        cache_sh,
     )
     out_shardings = (
-        ns(shd.batch_pspec(mesh, 0, None, 2, batch_size=b, seq_len=None)),
-        jax.tree_util.tree_map(ns, cache_ps),
+        plan.named(plan.logits_pspec(b)),
+        cache_sh,
     )
     jitted = jax.jit(serve_step, in_shardings=in_shardings,
                      out_shardings=out_shardings, donate_argnums=(2,))
-    with mesh, actshard.use_mesh(mesh):
+    with mesh, actshard.use_plan(plan):
         lowered = jitted.lower(abstract_params, tok_sds, abstract_cache)
     return lowered, {}
 
@@ -190,42 +179,29 @@ def build_serve_lowering(cfg, shape, mesh, policy, quantized_weights=False):
 def build_prefill_lowering(cfg, shape, mesh, policy):
     """prefill shapes: full-sequence forward producing the KV cache."""
     b = shape.global_batch
+    plan = planner.plan_for(cfg, mesh, shape=shape)
     batch_sds = pipeline.batch_specs(cfg, shape)
-    batch_ps = shd.data_pspecs(mesh, batch_sds)
-    abstract_cache = jax.eval_shape(
-        lambda: registry.init_cache(cfg, b, shape.seq_len)
-    )
-    cache_ps = shd.cache_pspecs(mesh, abstract_cache)
-    specs = registry.param_specs(cfg)
-    abstract_params = pspec.abstract(specs)
-    param_ps = shd.param_pspecs(specs, mesh)
+    abstract_cache = plan.cache_abstract
+    abstract_params = plan.abstract_params()
 
     def prefill_step(params, batch, cache):
         return registry.prefill(cfg, policy, params, batch, cache)
 
-    ns = lambda p: NamedSharding(mesh, p)
+    cache_sh = plan.cache_shardings()
     in_shardings = (
-        jax.tree_util.tree_map(ns, param_ps),
-        jax.tree_util.tree_map(ns, batch_ps),
-        jax.tree_util.tree_map(ns, cache_ps),
+        plan.param_shardings(),
+        plan.data_shardings(),
+        cache_sh,
     )
     out_shardings = (
-        ns(shd.batch_pspec(mesh, 0, None, 2, batch_size=b, seq_len=None)),
-        jax.tree_util.tree_map(ns, cache_ps),
+        plan.named(plan.logits_pspec(b)),
+        cache_sh,
     )
     jitted = jax.jit(prefill_step, in_shardings=in_shardings,
                      out_shardings=out_shardings, donate_argnums=(2,))
-    with mesh, actshard.use_mesh(mesh):
+    with mesh, actshard.use_plan(plan):
         lowered = jitted.lower(abstract_params, batch_sds, abstract_cache)
     return lowered, {}
-
-
-def _fsdp(mesh):
-    n = 1
-    for a in ("pod", "data"):
-        if a in mesh.axis_names:
-            n *= mesh.shape[a]
-    return n
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, policy=None,
@@ -240,7 +216,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, policy=None,
     if shape not in C.shapes_for(cfg):
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "skipped (full attention @512k by design)"}
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = meshes.make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     if shape.kind == "train":
         lowered, extra = build_train_lowering(cfg, shape, mesh, policy)

@@ -1,22 +1,14 @@
-"""Production mesh construction.
+"""Production mesh construction (thin re-export).
 
-``make_production_mesh`` is a function (module import never touches jax
-device state).  Single-pod: 16x16 = 256 chips ('data','model'); multi-pod:
-2x16x16 = 512 chips ('pod','data','model') — the 'pod' axis composes with
-'data' for DP/FSDP (repro.parallel.sharding.fsdp_axes).
+The real implementation lives in :mod:`repro.parallel.meshes`, the
+version-portable mesh compat shim; this module keeps the historical
+``repro.launch.mesh`` import path working for launchers and scripts.
 """
 from __future__ import annotations
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh():
-    """Degenerate 1-device mesh for CPU tests (all rules -> replicate)."""
-    n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+from repro.parallel.meshes import (  # noqa: F401
+    make_abstract_mesh,
+    make_host_mesh,
+    make_mesh,
+    make_production_mesh,
+)

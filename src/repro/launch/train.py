@@ -27,10 +27,9 @@ from repro.configs.base import ShapeConfig
 from repro.core import policy as policy_lib
 from repro.ckpt import CheckpointManager
 from repro.data import pipeline
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import registry, spec as pspec
+from repro.models import spec as pspec
 from repro.optim import adamw, sgd_momentum, step_decay_schedule, warmup_cosine_schedule
-from repro.parallel import actshard, sharding as shd
+from repro.parallel import actshard, meshes, planner
 from repro.train import TrainConfig, make_train_step
 
 
@@ -63,13 +62,16 @@ def main(argv=None):
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
 
     if args.mesh == "host":
-        mesh = make_host_mesh()
+        mesh = meshes.make_host_mesh()
     else:
-        mesh = make_production_mesh(multi_pod=args.mesh == "multi_pod")
+        mesh = meshes.make_production_mesh(multi_pod=args.mesh == "multi_pod")
 
-    specs = registry.param_specs(cfg)
+    # One validated plan drives every sharding decision below (params,
+    # optimizer mirrors, batch, in-model activation pins).
+    plan = planner.plan_for(cfg, mesh, shape=shape)
+    specs = plan.specs
     print(f"arch={cfg.name} params={pspec.count_params(specs)/1e6:.2f}M "
-          f"policy={args.policy} mesh={dict(mesh.shape)}")
+          f"policy={args.policy} mesh={meshes.shape_dict(mesh)}")
 
     if args.optimizer == "sgd":
         opt = sgd_momentum(step_decay_schedule(args.lr, [10**9]))
@@ -80,7 +82,7 @@ def main(argv=None):
         mesh=mesh if args.mesh != "host" else None,
     )
 
-    param_sh = shd.param_shardings(specs, mesh)
+    param_sh = plan.param_shardings()
     with mesh:
         params = jax.jit(
             lambda k: pspec.materialize(specs, k), out_shardings=param_sh
@@ -105,7 +107,7 @@ def main(argv=None):
 
     jit_step = jax.jit(tstep, donate_argnums=(0, 1))
     t0 = time.time()
-    with mesh, actshard.use_mesh(mesh if args.mesh != "host" else None):
+    with mesh, actshard.use_plan(plan if args.mesh != "host" else None):
         for step in range(start_step, args.steps):
             batch = pipeline.make_batch(cfg, shape, step)
             params, opt_state, metrics = jit_step(

@@ -7,15 +7,18 @@ propagating through the microbatch reshape — silently replicating the
 whole layer stack.  Production frameworks pin activations at every block
 boundary; we do the same.
 
-The mesh is threaded via a module-level context (set by the launcher /
-dry-run around tracing) so model code stays mesh-agnostic:
+The active :class:`~repro.parallel.planner.ShardingPlan` is threaded via
+a module-level context (set by the launcher / dry-run around tracing) so
+model code stays mesh-agnostic:
 
-    with actshard.use_mesh(mesh):
+    with actshard.use_plan(plan):
         lowered = jax.jit(step).lower(...)
 
-Inside model code, ``shard_tokens`` pins (B, S, ...) activations to
-(batch -> FSDP axes, seq -> 'model'); no-op when no mesh is active (CPU
-tests) or when a dim doesn't divide.
+Inside model code, ``shard_tokens`` pins (B, S, ...) activations to the
+plan's activation rule (batch -> FSDP axes, seq -> 'model'); no-op when
+no plan is active (CPU tests) or when a dim doesn't divide.
+``use_mesh(mesh)`` is kept as a shim for callers that have a mesh but no
+model config; it activates a params-less plan over that mesh.
 """
 from __future__ import annotations
 
@@ -23,43 +26,53 @@ import contextlib
 from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-_ACTIVE: Optional[Mesh] = None
+from repro.parallel.planner import ShardingPlan
+
+_ACTIVE: Optional[ShardingPlan] = None
+
+
+def active_plan() -> Optional[ShardingPlan]:
+    return _ACTIVE
 
 
 @contextlib.contextmanager
-def use_mesh(mesh: Optional[Mesh]):
+def use_plan(plan: Optional[ShardingPlan]):
+    """Activate ``plan`` for in-model activation pinning (None deactivates)."""
     global _ACTIVE
     prev = _ACTIVE
-    _ACTIVE = mesh
+    _ACTIVE = plan
     try:
         yield
     finally:
         _ACTIVE = prev
 
 
-def _axis_size(mesh, axes) -> int:
-    n = 1
-    for a in axes:
-        n *= mesh.shape[a]
-    return n
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Back-compat shim: activate a mesh with the default activation rules
+    (a params-less plan).  Prefer ``use_plan(planner.plan_for(cfg, mesh))``."""
+    plan = None
+    if mesh is not None:
+        plan = ShardingPlan(
+            mesh=mesh, params=None, data=None, cache=None, moe={}, report=()
+        )
+    with use_plan(plan):
+        yield
 
 
 def shard_tokens(x: jax.Array, *, seq_dim: int = 1) -> jax.Array:
     """Constrain a (B, S, ...) activation: B->fsdp, S->'model'."""
-    mesh = _ACTIVE
-    if mesh is None or x.ndim < 2:
+    plan = _ACTIVE
+    if plan is None or x.ndim < 2:
         return x
-    fa = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ma = "model" if "model" in mesh.axis_names else None
-    entries = [None] * x.ndim
-    if fa and x.shape[0] % _axis_size(mesh, fa) == 0:
-        entries[0] = fa if len(fa) > 1 else fa[0]
-    if ma and seq_dim < x.ndim and x.shape[seq_dim] % mesh.shape[ma] == 0:
-        entries[seq_dim] = ma
-    if all(e is None for e in entries):
-        return x
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, P(*entries))
+    sd = seq_dim if seq_dim < x.ndim else None
+    spec = plan.activation_pspec(
+        x.ndim,
+        batch_size=x.shape[0],
+        seq_len=x.shape[sd] if sd is not None else None,
+        seq_dim=sd,
     )
+    if all(e is None for e in spec):  # batch_pspec emits exactly ndim entries
+        return x
+    return jax.lax.with_sharding_constraint(x, plan.named(spec))

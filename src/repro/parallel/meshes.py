@@ -1,0 +1,146 @@
+"""Version-portable mesh construction (compat shim).
+
+JAX's mesh-building APIs have moved several times; this module is the one
+place in the codebase allowed to know about that.  Everything else asks
+for a mesh by ``(axis_sizes, axis_names)`` and gets whatever the installed
+JAX can build.
+
+Compatibility matrix (feature-detected at runtime — no version pins):
+
+==================  ==================================  =========================
+construct           old API (jax <= 0.4.x)              new API (jax >= 0.5)
+==================  ==================================  =========================
+``AbstractMesh``    ``AbstractMesh(((name, size),       ``AbstractMesh(
+                    ...))`` — one positional            (size, ...), (name, ...))``
+                    tuple-of-pairs ``shape_tuple``      — sizes and names split,
+                                                        kw-only ``axis_types``
+``Mesh`` (devices)  ``Mesh(device_ndarray,              same, plus
+                    axis_names)``;                      ``jax.make_mesh`` with
+                    ``jax.make_mesh`` from 0.4.35       explicit-sharding
+                                                        ``axis_types``
+introspection       ``mesh.shape`` (OrderedDict),       same attributes kept;
+                    ``mesh.axis_names``,                ``shape_tuple`` on
+                    ``mesh.axis_sizes``                 abstract meshes only
+==================  ==================================  =========================
+
+Detection is by *trial construction + read-back verification* (the built
+mesh must report the requested names and sizes), not by signature
+inspection, so intermediate releases that accept both call styles still
+resolve to a correct mesh.
+
+Production topologies live here too: single-pod 16x16 = 256 chips
+(``('data', 'model')``) and multi-pod 2x16x16 = 512 chips
+(``('pod', 'data', 'model')``); the ``'pod'`` axis composes with
+``'data'`` for DP/FSDP (see ``repro.parallel.planner``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+SINGLE_POD = ((16, 16), ("data", "model"))
+MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
+
+
+def axis_names(mesh) -> Tuple[str, ...]:
+    """Axis names of a concrete or abstract mesh."""
+    return tuple(mesh.axis_names)
+
+
+def axis_sizes(mesh) -> Tuple[int, ...]:
+    """Axis sizes of a concrete or abstract mesh, in axis order."""
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is not None:
+        return tuple(int(s) for s in sizes)
+    return tuple(int(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def shape_dict(mesh) -> dict:
+    """``{axis_name: size}`` for a concrete or abstract mesh."""
+    return dict(zip(axis_names(mesh), axis_sizes(mesh)))
+
+
+def _mesh_matches(mesh, sizes: Tuple[int, ...], names: Tuple[str, ...]) -> bool:
+    try:
+        return axis_names(mesh) == names and axis_sizes(mesh) == sizes
+    except Exception:
+        return False
+
+
+def make_abstract_mesh(sizes: Sequence[int], names: Sequence[str]) -> AbstractMesh:
+    """Build an ``AbstractMesh`` under whichever signature this JAX has.
+
+    Tries the new split ``(axis_sizes, axis_names)`` call first, then the
+    old tuple-of-pairs ``shape_tuple`` call; each candidate is verified by
+    reading the names/sizes back, so a constructor that "succeeds" by
+    misinterpreting its arguments is rejected.
+    """
+    sizes = tuple(int(s) for s in sizes)
+    names = tuple(str(n) for n in names)
+    if len(sizes) != len(names):
+        raise ValueError(f"axis count mismatch: sizes={sizes} names={names}")
+    candidates = (
+        lambda: AbstractMesh(sizes, names),          # new: sizes, names
+        lambda: AbstractMesh(tuple(zip(names, sizes))),  # old: ((name, size), ...)
+    )
+    errors = []
+    for build in candidates:
+        try:
+            mesh = build()
+        except (TypeError, ValueError) as e:
+            errors.append(e)
+            continue
+        if _mesh_matches(mesh, sizes, names):
+            return mesh
+    raise RuntimeError(
+        f"no AbstractMesh signature accepted sizes={sizes} names={names} "
+        f"on jax {jax.__version__}: {errors}"
+    )
+
+
+def make_mesh(
+    sizes: Sequence[int],
+    names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """Build a concrete device mesh across JAX variants.
+
+    Prefers ``jax.make_mesh`` (which picks a bandwidth-aware device
+    order) when present and no explicit device list is given; otherwise
+    falls back to reshaping ``devices`` (default: ``jax.devices()``)
+    into ``Mesh(device_array, names)``.
+    """
+    sizes = tuple(int(s) for s in sizes)
+    names = tuple(str(n) for n in names)
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(sizes, names)
+    import numpy as np
+
+    n = math.prod(sizes)
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices for mesh {sizes}, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(sizes), names)
+
+
+def make_production_mesh(*, multi_pod: bool = False, abstract: bool = False):
+    """The production topology: (16,16) single-pod or (2,16,16) multi-pod.
+
+    ``abstract=True`` returns an ``AbstractMesh`` (no devices needed —
+    what the planner and the sharding tests use); otherwise a concrete
+    mesh over real devices.
+    """
+    sizes, names = MULTI_POD if multi_pod else SINGLE_POD
+    if abstract:
+        return make_abstract_mesh(sizes, names)
+    return make_mesh(sizes, names)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1-host mesh for CPU tests (all rules -> replicate)."""
+    n = len(jax.devices())
+    return make_mesh((1, n), ("data", "model"))

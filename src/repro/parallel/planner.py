@@ -1,0 +1,283 @@
+"""First-class sharding plans: one validated object per (config, mesh).
+
+``repro.parallel.sharding`` holds the logical-axis -> mesh-axis *rules*;
+this module packages their output into a :class:`ShardingPlan` — the
+single artifact that ``launch/train.py``, ``launch/dryrun.py``,
+``serve/engine.py`` and ``parallel/actshard.py`` consume.  Consumers never
+re-derive rules per-tensor; they ask the plan for ``PartitionSpec``s /
+``NamedSharding``s, and the plan has already been *validated*:
+
+* every dimension of every param / batch / cache leaf either divides
+  evenly over its assigned mesh axes or is explicitly replicated,
+* no mesh axis is used twice within one spec,
+* every MoE tensor carries an explicit EP-vs-TP decision.
+
+Misconfigurations therefore fail at plan-construction time with a
+readable :class:`ShardingPlanError` naming the offending leaf and dim —
+not as an inscrutable SPMD partitioner error inside ``jit``.
+
+Planner API (see docs/DESIGN_parallel.md):
+
+    mesh = meshes.make_production_mesh(abstract=True)
+    plan = planner.plan_for(cfg, mesh, shape=shape)   # validated on build
+    plan.params                # pytree of PartitionSpec (mirrors param_specs)
+    plan.param_shardings()     # same, as NamedSharding(mesh, .)
+    plan.data / plan.cache     # batch-dict / decode-cache specs (if shape given)
+    plan.moe                   # {leaf path: 'EP' | 'TP' | 'replicated'}
+    plan.report                # per-leaf, per-dim divisibility decisions
+    plan.summary()             # human-readable table of all of the above
+
+Plans are mesh-agnostic in the API sense: the same call works on the
+abstract production meshes (16,16) / (2,16,16) and on the 1-device CPU
+host mesh, where every rule degrades to replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel import meshes, sharding as shd
+
+
+class ShardingPlanError(ValueError):
+    """A sharding plan failed validation (non-divisible dim / axis reuse)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DimDecision:
+    """What the plan decided for one dimension of one leaf."""
+
+    dim: int
+    size: int
+    axes: Tuple[str, ...]  # () == replicated
+    reason: str  # 'sharded' | 'replicated'
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafReport:
+    """Per-leaf record: where each dim went and why."""
+
+    kind: str  # 'param' | 'data' | 'cache'
+    path: str
+    shape: Tuple[int, ...]
+    spec: P
+    dims: Tuple[DimDecision, ...]
+
+
+def _entry_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _analyze_leaf(kind: str, path: str, shape, spec: P) -> LeafReport:
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    dims = []
+    for i, (size, entry) in enumerate(zip(shape, entries)):
+        axes = _entry_axes(entry)
+        dims.append(
+            DimDecision(
+                dim=i,
+                size=int(size),
+                axes=axes,
+                reason="sharded" if axes else "replicated",
+            )
+        )
+    return LeafReport(kind, path, tuple(int(s) for s in shape), spec, tuple(dims))
+
+
+def _validate_leaf(rep: LeafReport, mesh_shape: dict):
+    if len(tuple(rep.spec)) > len(rep.shape):
+        raise ShardingPlanError(
+            f"{rep.kind} {rep.path}: spec {rep.spec} longer than shape {rep.shape}"
+        )
+    used = set()
+    for d in rep.dims:
+        n = 1
+        for a in d.axes:
+            if a not in mesh_shape:
+                raise ShardingPlanError(
+                    f"{rep.kind} {rep.path} dim {d.dim}: unknown mesh axis "
+                    f"{a!r} (mesh has {sorted(mesh_shape)})"
+                )
+            if a in used:
+                raise ShardingPlanError(
+                    f"{rep.kind} {rep.path}: mesh axis {a!r} used twice in {rep.spec}"
+                )
+            used.add(a)
+            n *= mesh_shape[a]
+        if d.size % n != 0:
+            raise ShardingPlanError(
+                f"{rep.kind} {rep.path} dim {d.dim}: size {d.size} not divisible "
+                f"by {d.axes} (= {n}) on mesh {mesh_shape}"
+            )
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """A validated GSPMD plan for one (model config, mesh) pair."""
+
+    mesh: Any  # Mesh | AbstractMesh
+    params: Any  # pytree of PartitionSpec, mirrors registry.param_specs(cfg)
+    data: Optional[Dict[str, P]]  # batch-dict specs (when built with a shape)
+    cache: Optional[Any]  # KV/recurrent-cache specs (prefill/decode shapes)
+    moe: Dict[str, str]  # MoE leaf path -> 'EP' | 'TP' | 'replicated'
+    report: Tuple[LeafReport, ...]
+    shape: Optional[Any] = None  # the ShapeConfig this plan was built for
+    cache_abstract: Optional[Any] = None  # ShapeDtypeStruct tree behind `cache`
+    specs: Optional[Any] = None  # the ParamSpec tree the plan was derived from
+
+    # -- shardings ---------------------------------------------------------
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _tree_named(self, tree):
+        return jax.tree_util.tree_map(
+            self.named, tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    def param_shardings(self):
+        return self._tree_named(self.params)
+
+    def data_shardings(self):
+        assert self.data is not None, "plan built without a shape"
+        return self._tree_named(self.data)
+
+    def cache_shardings(self):
+        assert self.cache is not None, "plan built without a prefill/decode shape"
+        return self._tree_named(self.cache)
+
+    # -- activation / scalar helpers --------------------------------------
+    def activation_pspec(self, ndim: int, *, batch_size: int,
+                         seq_len: Optional[int] = None,
+                         batch_dim: int = 0,
+                         seq_dim: Optional[int] = None) -> P:
+        """Spec for a (B, [S,] ...) activation under the plan's rules."""
+        return shd.batch_pspec(
+            self.mesh, batch_dim, seq_dim, ndim,
+            batch_size=batch_size, seq_len=seq_len,
+        )
+
+    def token_pspec(self, batch_size: int) -> P:
+        """(B,) per-step decode tokens: batch over the FSDP axes."""
+        return self.activation_pspec(1, batch_size=batch_size)
+
+    def logits_pspec(self, batch_size: int) -> P:
+        """(B, V) decode logits: batch over the FSDP axes, vocab replicated
+        (the lm head all-gathers; V is tiny traffic at decode batch sizes)."""
+        return self.activation_pspec(2, batch_size=batch_size)
+
+    def replicated(self) -> NamedSharding:
+        return self.named(P())
+
+    def fsdp_size(self) -> int:
+        """Total size of the data-parallel/FSDP axes of the plan's mesh."""
+        return shd._axis_size(self.mesh, shd.fsdp_axes(self.mesh))
+
+    def abstract_params(self):
+        """ShapeDtypeStruct tree of the planned params (for .lower())."""
+        from repro.models import spec as pspec_lib
+
+        assert self.specs is not None, "params-less plan"
+        return pspec_lib.abstract(self.specs)
+
+    # -- introspection -----------------------------------------------------
+    def validate(self) -> "ShardingPlan":
+        mesh_shape = meshes.shape_dict(self.mesh)
+        for rep in self.report:
+            _validate_leaf(rep, mesh_shape)
+        return self
+
+    def summary(self) -> str:
+        mesh_shape = meshes.shape_dict(self.mesh)
+        lines = [f"ShardingPlan on mesh {mesh_shape}:"]
+        for rep in self.report:
+            lines.append(f"  [{rep.kind}] {rep.path} {rep.shape} -> {rep.spec}")
+        for path, decision in sorted(self.moe.items()):
+            lines.append(f"  [moe] {path}: {decision}")
+        return "\n".join(lines)
+
+
+def _moe_decision(spec_axes, pspec: P, mesh) -> Optional[str]:
+    """Classify one MoE tensor: EP (experts over 'model'), TP (sharded
+    inside each expert), or fully replicated."""
+    if "expert" not in spec_axes:
+        return None
+    ma = shd.model_axis(mesh)
+    if ma is None:
+        return "replicated"
+    entries = tuple(pspec)
+    e_dim = spec_axes.index("expert")
+    if e_dim < len(entries) and ma in _entry_axes(entries[e_dim]):
+        return "EP"
+    if any(ma in _entry_axes(e) for e in entries):
+        return "TP"
+    return "replicated"
+
+
+def plan_for(cfg, mesh, shape=None, *, validate: bool = True) -> ShardingPlan:
+    """Build (and by default validate) the plan for ``cfg`` on ``mesh``.
+
+    ``shape`` (a ``ShapeConfig``) additionally plans the batch dict, and —
+    for decode shapes — the KV/recurrent cache pytree.
+    """
+    # local imports: keep repro.parallel importable without the model zoo
+    from repro.data import pipeline
+    from repro.models import registry, spec as pspec_lib
+
+    specs = registry.param_specs(cfg)
+    params = shd.param_pspecs(specs, mesh)
+
+    report = []
+    moe: Dict[str, str] = {}
+    flat_s = jax.tree_util.tree_flatten_with_path(specs, is_leaf=pspec_lib.is_spec)[0]
+    flat_p = jax.tree_util.tree_leaves(params, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p), "param spec/pspec tree mismatch"
+    for (path, s), p in zip(flat_s, flat_p):
+        ps = _path_str(path)
+        report.append(_analyze_leaf("param", ps, s.shape, p))
+        d = _moe_decision(s.axes, p, mesh)
+        if d is not None:
+            moe[ps] = d
+
+    data = None
+    cache = None
+    abstract_cache = None
+    if shape is not None:
+        batch_sds = pipeline.batch_specs(cfg, shape)
+        data = shd.data_pspecs(mesh, batch_sds)
+        for name, p in data.items():
+            report.append(
+                _analyze_leaf("data", name, batch_sds[name].shape, p)
+            )
+        if getattr(shape, "kind", None) in ("prefill", "decode"):
+            abstract_cache = jax.eval_shape(
+                lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            cache = shd.cache_pspecs(mesh, abstract_cache)
+            flat_c = jax.tree_util.tree_leaves_with_path(abstract_cache)
+            flat_cp = jax.tree_util.tree_leaves(
+                cache, is_leaf=lambda x: isinstance(x, P)
+            )
+            for (path, leaf), p in zip(flat_c, flat_cp):
+                report.append(
+                    _analyze_leaf("cache", _path_str(path), leaf.shape, p)
+                )
+
+    plan = ShardingPlan(
+        mesh=mesh, params=params, data=data, cache=cache,
+        moe=moe, report=tuple(report), shape=shape,
+        cache_abstract=abstract_cache, specs=specs,
+    )
+    if validate:
+        plan.validate()
+    return plan

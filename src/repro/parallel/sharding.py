@@ -13,7 +13,13 @@ Baseline production scheme (applies uniformly to every arch):
 
 Rules are *functions of the mesh*, so the same model code runs on the
 single-pod (16,16) and multi-pod (2,16,16) meshes, and on 1-device CPU
-test meshes (where every rule degrades to replication).
+test meshes (where every rule degrades to replication).  Meshes may be
+concrete or abstract — introspection goes through the compat shim in
+``repro.parallel.meshes``.
+
+These are the low-level rules; consumers should go through the validated
+:class:`repro.parallel.planner.ShardingPlan` instead of calling the
+per-tensor functions here directly.
 """
 from __future__ import annotations
 
@@ -23,14 +29,15 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import spec as pspec
+from repro.parallel import meshes
 
 
 def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in meshes.axis_names(mesh))
 
 
 def model_axis(mesh: Mesh) -> Optional[str]:
-    return "model" if "model" in mesh.axis_names else None
+    return "model" if "model" in meshes.axis_names(mesh) else None
 
 
 def _axis_size(mesh: Mesh, axes) -> int:
@@ -38,9 +45,10 @@ def _axis_size(mesh: Mesh, axes) -> int:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
+    shape = meshes.shape_dict(mesh)
     n = 1
     for a in axes:
-        n *= mesh.shape[a]
+        n *= shape[a]
     return n
 
 
@@ -71,7 +79,7 @@ def spec_to_pspec(s: "pspec.ParamSpec", mesh: Mesh) -> P:
 
     if "expert" in axes and ma is not None:
         e_dim = s.shape[axes.index("expert")]
-        if e_dim % mesh.shape[ma] == 0:
+        if e_dim % _axis_size(mesh, ma) == 0:
             # EP: experts over 'model'; 'ffn' inside each expert replicated.
             out[axes.index("expert")] = ma
             used.add(ma)

@@ -2,8 +2,19 @@
 
 ``serve_step`` for the dry-run is the single-token decode step with a full
 KV cache of ``seq_len`` — exactly the assignment's ``decode_*`` semantics.
+
+Sharded serving consumes a validated
+:class:`repro.parallel.planner.ShardingPlan` (built with a decode
+``ShapeConfig`` so the plan carries batch/cache specs): pass ``plan=`` to
+the step factories to get jit-compiled steps whose in/out shardings come
+from the plan, or to :func:`generate` to pin in-model activations during
+the decode loop.  With ``plan=None`` (CPU tests, single device)
+everything runs unsharded exactly as before.
 """
 from __future__ import annotations
+
+import contextlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,22 +22,68 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.policy import QuantPolicy
 from repro.models import registry
+from repro.parallel import actshard
+from repro.parallel.planner import ShardingPlan
 
 
-def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy):
+def _plan_batch(plan: ShardingPlan) -> int:
+    assert plan.shape is not None, (
+        "serving plans must be built with a ShapeConfig "
+        "(planner.plan_for(cfg, mesh, shape=decode_shape))"
+    )
+    return plan.shape.global_batch
+
+
+def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
+                      plan: Optional[ShardingPlan] = None):
     def prefill_step(params, batch, cache):
         return registry.prefill(cfg, policy, params, batch, cache)
 
-    return prefill_step
+    if plan is None:
+        return prefill_step
+    b = _plan_batch(plan)
+    cache_sh = plan.cache_shardings()
+    return jax.jit(
+        prefill_step,
+        in_shardings=(
+            plan.param_shardings(),
+            plan.data_shardings(),
+            cache_sh,
+        ),
+        out_shardings=(
+            plan.named(plan.logits_pspec(b)),
+            cache_sh,
+        ),
+        donate_argnums=(2,),
+    )
 
 
-def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *, greedy=True):
+def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *, greedy=True,
+                     plan: Optional[ShardingPlan] = None):
     def decode_step(params, token, cache):
         logits, cache = registry.decode_step(cfg, policy, params, token, cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, cache
 
-    return decode_step
+    if plan is None:
+        return decode_step
+    b = _plan_batch(plan)
+    cache_sh = plan.cache_shardings()
+    tok_sh = plan.named(plan.token_pspec(b))
+    return jax.jit(
+        decode_step,
+        in_shardings=(
+            plan.param_shardings(),
+            tok_sh,
+            cache_sh,
+        ),
+        out_shardings=(
+            tok_sh,
+            plan.named(plan.logits_pspec(b)),
+            cache_sh,
+        ),
+        donate_argnums=(2,),
+    )
 
 
 def generate(
@@ -38,19 +95,27 @@ def generate(
     max_new_tokens: int,
     max_len: int,
     cache_dtype=jnp.bfloat16,
+    plan: Optional[ShardingPlan] = None,
 ):
-    """Greedy generation driver (used by examples/tests; python loop)."""
+    """Greedy generation driver (used by examples/tests; python loop).
+
+    With ``plan`` (built for the serving mesh), in-model activations are
+    pinned through the plan for both prefill and every decode step; with
+    ``plan=None`` any ambient ``actshard`` context is left in effect.
+    """
     b = batch["tokens"].shape[0]
-    cache = registry.init_cache(cfg, b, max_len, cache_dtype)
-    logits, cache = registry.prefill(cfg, policy, params, batch, cache)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    step = jax.jit(
-        lambda p, t, c: registry.decode_step(cfg, policy, p, t, c),
-        static_argnums=(),
-    )
-    for _ in range(max_new_tokens - 1):
-        logits, cache = step(params, tok, cache)
+    ctx = actshard.use_plan(plan) if plan is not None else contextlib.nullcontext()
+    with ctx:
+        cache = registry.init_cache(cfg, b, max_len, cache_dtype)
+        logits, cache = registry.prefill(cfg, policy, params, batch, cache)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
+        out = [tok]
+        step = jax.jit(
+            lambda p, t, c: registry.decode_step(cfg, policy, p, t, c),
+            static_argnums=(),
+        )
+        for _ in range(max_new_tokens - 1):
+            logits, cache = step(params, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
     return jnp.stack(out, axis=1)

@@ -1,12 +1,15 @@
 """Unit tests for model components: attention, RoPE, MoE dispatch, norms."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dev dep (requirements-dev.txt): degrade to skips, not a
+# collection error, when hypothesis isn't installed
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core.policy import FP32_BASELINE as POL

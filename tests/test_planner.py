@@ -1,0 +1,143 @@
+"""Planner subsystem tests: ShardingPlan validity on all meshes, plan-level
+validation failures, and the version-portable AbstractMesh compat shim."""
+import jax
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.parallel import meshes, planner
+
+MESHES = [
+    ((16, 16), ("data", "model")),
+    ((2, 16, 16), ("pod", "data", "model")),
+]
+
+
+def _leaf_shardings(plan):
+    out = list(jax.tree_util.tree_leaves(plan.param_shardings()))
+    if plan.data is not None:
+        out += list(jax.tree_util.tree_leaves(plan.data_shardings()))
+    if plan.cache is not None:
+        out += list(jax.tree_util.tree_leaves(plan.cache_shardings()))
+    return out
+
+
+@pytest.mark.parametrize("sizes,names", MESHES, ids=["single_pod", "multi_pod"])
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_plan_accepted_by_namedsharding_on_production_meshes(arch, sizes, names):
+    """Every spec a plan emits must be constructible as a NamedSharding on
+    the abstract production meshes (NamedSharding validates axes)."""
+    mesh = meshes.make_abstract_mesh(sizes, names)
+    cfg = C.get_config(arch)
+    plan = planner.plan_for(cfg, mesh, shape=C.DECODE_32K)
+    shardings = _leaf_shardings(plan)
+    assert shardings and all(isinstance(s, NamedSharding) for s in shardings)
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_plan_degrades_to_replication_on_host_mesh(arch):
+    """On the 1-device CPU mesh every leaf must be effectively replicated:
+    any axes the rules assign have total size 1."""
+    mesh = meshes.make_host_mesh()
+    mesh_shape = meshes.shape_dict(mesh)
+    cfg = C.get_config(arch)
+    plan = planner.plan_for(cfg, mesh, shape=C.DECODE_32K)
+    assert all(isinstance(s, NamedSharding) for s in _leaf_shardings(plan))
+    for rep in plan.report:
+        for d in rep.dims:
+            n = 1
+            for a in d.axes:
+                n *= mesh_shape[a]
+            assert n == 1, (rep.path, d)
+
+
+def test_plan_moe_decisions():
+    """llama4 (16e) -> EP over the 16-way model axis; grok (8e) -> TP
+    inside each expert (8 does not divide 16)."""
+    mesh = meshes.make_production_mesh(abstract=True)
+    l4 = planner.plan_for(C.get_config("llama4-scout-17b-a16e"), mesh)
+    gk = planner.plan_for(C.get_config("grok-1-314b"), mesh)
+    assert l4.moe and set(l4.moe.values()) == {"EP"}
+    assert gk.moe and set(gk.moe.values()) == {"TP"}
+
+
+def test_validation_rejects_nondivisible_and_axis_reuse():
+    mesh = meshes.make_production_mesh(abstract=True)  # (16, 16)
+    good = planner.plan_for(C.get_config("olmo-1b"), mesh)
+
+    def plan_with(shape, spec):
+        rep = planner._analyze_leaf("param", "bogus", shape, spec)
+        return planner.ShardingPlan(
+            mesh=mesh, params=None, data=None, cache=None, moe={},
+            report=(rep,),
+        )
+
+    with pytest.raises(planner.ShardingPlanError, match="not divisible"):
+        plan_with((24, 8), P("model", None)).validate()
+    with pytest.raises(planner.ShardingPlanError, match="used twice"):
+        plan_with((32, 32), P("model", "model")).validate()
+    with pytest.raises(planner.ShardingPlanError, match="unknown mesh axis"):
+        plan_with((32, 32), P("nonesuch", None)).validate()
+    assert good.validate() is good  # idempotent on a valid plan
+
+
+def test_plan_summary_mentions_every_leaf():
+    mesh = meshes.make_production_mesh(abstract=True)
+    plan = planner.plan_for(C.get_config("llama4-scout-17b-a16e"), mesh)
+    text = plan.summary()
+    assert "[param]" in text and "[moe]" in text
+    assert len(text.splitlines()) >= len(plan.report)
+
+
+# ---------------------------------------------------------------------------
+# Mesh compat shim regression: pin behavior under BOTH AbstractMesh call
+# signatures, independent of which one the installed JAX uses.
+# ---------------------------------------------------------------------------
+
+
+class _PairStyleMesh:
+    """Old API: AbstractMesh(((name, size), ...))."""
+
+    def __init__(self, shape_tuple, axis_types=None):
+        names, sizes = zip(*shape_tuple)  # TypeError on a tuple of ints
+        self.axis_names = tuple(names)
+        self.axis_sizes = tuple(int(s) for s in sizes)
+        self.shape = dict(zip(self.axis_names, self.axis_sizes))
+
+
+class _SplitStyleMesh:
+    """New API: AbstractMesh((size, ...), (name, ...))."""
+
+    def __init__(self, axis_sizes, axis_names=None, axis_types=None):
+        if axis_names is None or not all(
+            isinstance(s, int) for s in axis_sizes
+        ):
+            raise TypeError("expected (sizes, names)")
+        self.axis_names = tuple(axis_names)
+        self.axis_sizes = tuple(axis_sizes)
+        self.shape = dict(zip(self.axis_names, self.axis_sizes))
+
+
+@pytest.mark.parametrize(
+    "fake", [_PairStyleMesh, _SplitStyleMesh], ids=["pair_style", "split_style"]
+)
+def test_shim_resolves_either_abstract_mesh_signature(monkeypatch, fake):
+    monkeypatch.setattr(meshes, "AbstractMesh", fake)
+    m = meshes.make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert meshes.axis_names(m) == ("pod", "data", "model")
+    assert meshes.axis_sizes(m) == (2, 16, 16)
+    assert meshes.shape_dict(m) == {"pod": 2, "data": 16, "model": 16}
+
+
+def test_shim_builds_real_abstract_mesh_on_installed_jax():
+    """Whatever signature this JAX ships, the shim must produce a usable
+    AbstractMesh that NamedSharding accepts."""
+    m = meshes.make_abstract_mesh((16, 16), ("data", "model"))
+    assert meshes.shape_dict(m) == {"data": 16, "model": 16}
+    ns = NamedSharding(m, P("data", "model"))
+    assert ns.spec == P("data", "model")
+
+
+def test_shim_rejects_mismatched_axes():
+    with pytest.raises(ValueError):
+        meshes.make_abstract_mesh((16, 16), ("data",))

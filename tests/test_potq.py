@@ -1,11 +1,14 @@
 """Property tests for the ALS-PoTQ quantizer (paper §3/§4.1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dev dep (requirements-dev.txt): degrade to skips, not a
+# collection error, when hypothesis isn't installed
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import potq
 

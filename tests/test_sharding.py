@@ -1,30 +1,33 @@
 """Sharding rules: every param/batch/cache leaf gets a divisible spec on
-both production meshes (checked abstractly — no devices needed)."""
+both production meshes (checked abstractly — no devices needed).
+
+Abstract meshes are built through the version-portable compat shim
+(repro.parallel.meshes), which resolves the AbstractMesh constructor
+signature for the installed JAX."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs as C
 from repro.data import pipeline
 from repro.models import registry, spec as pspec
-from repro.parallel import sharding as shd
+from repro.parallel import meshes, sharding as shd
 
 
 def _mesh(multi_pod: bool):
-    if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+    return meshes.make_production_mesh(multi_pod=multi_pod, abstract=True)
 
 
 def _axis_size(mesh, entry):
+    shape = meshes.shape_dict(mesh)
     if entry is None:
         return 1
     if isinstance(entry, str):
-        return mesh.shape[entry]
+        return shape[entry]
     n = 1
     for a in entry:
-        n *= mesh.shape[a]
+        n *= shape[a]
     return n
 
 
