@@ -5,9 +5,20 @@ Pallas kernel runs in interpret mode); the numbers that matter for the
 TPU target are the *derived* columns: VMEM working set per block, MXU
 tile alignment, and arithmetic intensity — those are structural and
 backend-independent.
+
+Tune-aware section: for each benchmarked matmul shape the autotuner
+(repro.kernels.autotune) measures every candidate tiling — the fixed
+256^3 default always among them — and the ``potq_matmul_tuned_*`` rows
+report tuned-vs-default time.  ``speedup_x >= 1.0`` is guaranteed by the
+argmin (ties break toward the default), and the fixed-order reduction
+makes every tiling bit-identical, so the tuned choice is a pure win.
+
+``--json out.json`` dumps all rows (CI uploads this as an artifact).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,7 +26,16 @@ import jax.numpy as jnp
 
 from repro.core import mfmac, potq
 from repro.core.policy import FP32_BASELINE, PAPER_FAITHFUL
+from repro.kernels import autotune
 from repro.kernels import potq_matmul as K
+
+#: matmul shapes the tune-aware section benchmarks (kept small enough for
+#: interpret mode on CPU; on TPU add production shapes freely)
+TUNED_SHAPES = [
+    (256, 256, 256),
+    (256, 512, 256),
+    (512, 512, 512),
+]
 
 
 def _time(f, *args, iters=5):
@@ -29,14 +49,10 @@ def _time(f, *args, iters=5):
 
 def vmem_block_bytes(bm, bn, bk):
     """Derived: VMEM working set of one grid step of the fused kernel."""
-    a = bm * bk * 4
-    w = bk * bn * 4
-    acc = bm * bn * 4
-    bf16_copies = (bm * bk + bk * bn) * 2
-    return a + w + acc + bf16_copies
+    return autotune.vmem_block_bytes(bm, bn, bk)
 
 
-def run():
+def run(tune_iters: int = 2, persist: bool = False):
     rows = []
     m, k, n = 512, 512, 512
     a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
@@ -63,9 +79,49 @@ def run():
             f"mxu_aligned={'yes' if min(bm,bn,bk)%128==0 else 'no'} "
             f"fits_vmem={'yes' if vb < 16*2**20 else 'NO'}",
         ))
+
+    # -- tune-aware: autotuned tiling vs the old fixed 256^3 default ------
+    # persist=False by default: benchmark timings (few iters) must not
+    # clobber a carefully measured persistent tuned table
+    for (tm, tk, tn) in TUNED_SHAPES:
+        choice = autotune.tune(tm, tk, tn, iters=tune_iters, persist=persist)
+        key = autotune.cache_key(tm, tk, tn)
+        entry = autotune.active_cache().get(key)
+        tuned_us = entry["us"]
+        default_us = entry["default_us"]
+        rows.append((
+            f"potq_matmul_tuned_{tm}x{tk}x{tn}", tuned_us,
+            f"blocks={choice.bm}x{choice.bn}x{choice.bk} "
+            f"default_us={default_us:.1f} "
+            f"speedup_x={default_us/max(tuned_us,1e-9):.2f} "
+            f"no_slower_than_default={'yes' if tuned_us <= default_us else 'NO'}",
+        ))
     return rows
 
 
-if __name__ == "__main__":
-    for name, us, derived in run():
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", help="also dump rows as JSON")
+    ap.add_argument("--tune-iters", type=int, default=2)
+    ap.add_argument("--cache", default="",
+                    help="autotune cache path to read AND persist tuned "
+                         "entries to; by default nothing is written — "
+                         "benchmark timings never clobber the persistent "
+                         "tuned table")
+    args = ap.parse_args()
+    if args.cache:
+        autotune.reset_cache(args.cache)
+    rows = run(tune_iters=args.tune_iters, persist=bool(args.cache))
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        payload = [
+            {"name": name, "us": us, "derived": derived}
+            for name, us, derived in rows
+        ]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

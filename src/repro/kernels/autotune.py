@@ -1,0 +1,419 @@
+"""Block-shape autotuner + on-disk tuning cache for the PoTQ matmul kernel.
+
+The fixed-order canonical-chunk reduction (kernels/potq_matmul.py,
+``ACC_SCHEME``) makes the kernel's output bit-identical for every
+``(bm, bn, bk)`` tiling, so block shapes are a pure *performance* knob:
+retuning per arch/mesh/backend can never invalidate checkpoints or golden
+outputs.  This module exploits that freedom:
+
+* :func:`resolve` — what ``kernels/ops.py`` calls per matmul: explicit
+  blocks are clamped to the problem, ``None`` blocks consult the tuned
+  table (in-memory -> on-disk cache -> structural heuristic).
+* :func:`tune` — measure all :func:`candidate_blocks` for one problem
+  shape on the current backend and persist the winner.  The fixed 256^3
+  default is always among the candidates, so the tuned choice is never
+  slower than the old hardcoded default *by construction of the argmin*.
+* :func:`prime_for_model` — enumerate the dense-projection matmul shapes
+  of a ``ModelConfig`` (what serve/engine.py and launch/train.py hit) and
+  look up / tune each one ahead of trace time.
+
+Cache format (JSON, one file):
+
+    {"format": 1,
+     "scheme": "<potq_matmul.ACC_SCHEME>",
+     "entries": {"<key>": {"bm":..,"bn":..,"bk":..,"us":..,
+                            "default_us":.., "source":"measured"}}}
+
+Keys bind the *problem*: padded (m, k, n), kernel operand dtype (ops.py
+casts inputs to f32 before the kernel, so this is always "float32" today
+— the field exists so a future bf16-operand kernel re-tunes instead of
+reusing f32 timings), (emax_a, emax_w), quantize flag, and jax backend.
+Invalidation is by construction:
+a cache whose ``scheme`` or ``format`` doesn't match the running kernel is
+discarded wholesale (the accumulation order defines the numerics AND the
+per-block cost model), and backend changes miss on the key.  Writes are
+atomic (tmp + ``os.replace``) so concurrent tuners can't tear the file.
+
+Path: ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/potq_autotune.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import potq
+from repro.kernels import potq_matmul as _k
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_FORMAT = 1
+#: per-grid-step VMEM working-set budget (a 256^3 fp32 block set uses
+#: ~1.2 MiB; 16 MiB keeps double-buffering headroom on 32 MiB parts)
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        CACHE_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "potq_autotune.json"),
+    )
+
+
+def vmem_block_bytes(bm: int, bn: int, bk: int) -> int:
+    """VMEM working set of one grid step of the fused kernel."""
+    a = bm * bk * 4
+    w = bk * bn * 4
+    acc = bm * bn * 4
+    bf16_copies = (bm * bk + bk * bn) * 2
+    return a + w + acc + bf16_copies
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChoice:
+    bm: int
+    bn: int
+    bk: int
+    source: str  # 'measured' | 'heuristic' | 'override'
+    us: Optional[float] = None  # measured kernel time (measured entries)
+
+    @property
+    def blocks(self) -> Tuple[int, int, int]:
+        return (self.bm, self.bn, self.bk)
+
+
+def _pad_dims(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """Problem dims after ops.py's minimum lane padding (8, 128, 128)."""
+    return (m + (-m) % 8, k + (-k) % 128, n + (-n) % 128)
+
+
+def cache_key(m: int, k: int, n: int, *, dtype: str = "float32",
+              emax_a: int = 7, emax_w: int = 7, quantize: bool = True,
+              backend: Optional[str] = None) -> str:
+    mp, kp, np_ = _pad_dims(m, k, n)
+    backend = backend or jax.default_backend()
+    if not quantize:
+        # the raw (pot_value_matmul) path never runs the in-kernel
+        # quantizer, so emax is irrelevant — normalize it out of the key
+        # so every caller hits the same entry regardless of policy bits
+        emax_a = emax_w = 0
+    q = "q" if quantize else "raw"
+    return f"potq_matmul|{mp}x{kp}x{np_}|{dtype}|e{emax_a},{emax_w}|{q}|{backend}"
+
+
+def clamp_blocks(m: int, k: int, n: int, bm: int, bn: int, bk: int):
+    """Clamp block sizes to (padded) problem dims, keep >=8x128 lane tiles.
+
+    bk is additionally floored to a CANONICAL_BK multiple — the kernel's
+    fixed-order reduction asserts it, so this is what actually keeps a
+    hand-edited cache entry from crashing at trace time."""
+    mp, kp, np_ = _pad_dims(m, k, n)
+    bm = min(bm, max(8, mp))
+    bn = min(bn, max(128, np_))
+    bk = min(bk, max(128, kp))
+    bk = max(_k.CANONICAL_BK, bk - bk % _k.CANONICAL_BK)
+    return bm, bn, bk
+
+
+def heuristic_blocks(m: int, k: int, n: int) -> BlockChoice:
+    """The pre-autotune structural default: 256^3 clamped to the problem."""
+    bm, bn, bk = clamp_blocks(
+        m, k, n, _k.DEFAULT_BM, _k.DEFAULT_BN, _k.DEFAULT_BK
+    )
+    return BlockChoice(bm, bn, bk, "heuristic")
+
+
+def candidate_blocks(m: int, k: int, n: int) -> List[Tuple[int, int, int]]:
+    """MXU-aligned candidate tilings for one problem, VMEM-filtered.
+
+    Always contains :func:`heuristic_blocks` (the old fixed default), so a
+    measured argmin can never regress against it.
+    """
+    mp, kp, np_ = _pad_dims(m, k, n)
+    bms = sorted({min(v, max(8, mp)) for v in (64, 128, 256, 512)})
+    bns = sorted({min(v, max(128, np_)) for v in (128, 256, 512)})
+    bks = sorted({min(v, max(128, kp)) for v in (128, 256, 512)})
+    out = []
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if vmem_block_bytes(bm, bn, bk) <= VMEM_BUDGET_BYTES:
+                    out.append((bm, bn, bk))
+    h = heuristic_blocks(m, k, n).blocks
+    if h not in out:
+        out.append(h)
+    return sorted(set(out))
+
+
+class TuningCache:
+    """On-disk JSON table of measured block choices (atomic writes)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self._entries: Optional[Dict[str, dict]] = None
+
+    def _read_disk(self) -> Dict[str, dict]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if (
+                raw.get("format") == CACHE_FORMAT
+                and raw.get("scheme") == _k.ACC_SCHEME
+            ):
+                return dict(raw.get("entries", {}))
+            # stale scheme/format -> treat as empty; the next put()
+            # rewrites the file under the current scheme tag.
+        except (OSError, ValueError):
+            pass
+        return {}
+
+    def _load_locked(self) -> Dict[str, dict]:
+        if self._entries is None:
+            self._entries = self._read_disk()
+        return self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            return self._load_locked().get(key)
+
+    def put(self, key: str, entry: dict, *, persist: bool = True):
+        with self._lock:
+            entries = self._load_locked()
+            entries[key] = entry
+            if not persist:
+                return
+            # merge with what is on disk NOW: another tuner process may
+            # have persisted entries since we loaded — a blind rewrite of
+            # our stale view would silently drop its measured results
+            merged = self._read_disk()
+            merged.update(entries)
+            entries = self._entries = merged
+            payload = {
+                "format": CACHE_FORMAT,
+                "scheme": _k.ACC_SCHEME,
+                "entries": entries,
+            }
+            d = os.path.dirname(self.path) or "."
+            tmp = None
+            try:
+                os.makedirs(d, exist_ok=True)
+                fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except OSError as e:
+                # measured entries are expensive (a full candidate sweep);
+                # never lose one silently
+                warnings.warn(
+                    f"autotune cache not persisted to {self.path}: {e} "
+                    f"(set {CACHE_ENV} to a writable path)"
+                )
+                if tmp is not None:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+
+    def entries(self) -> Dict[str, dict]:
+        with self._lock:
+            return dict(self._load_locked())
+
+
+_CACHE: Optional[TuningCache] = None
+_CACHE_PINNED = False
+_CACHE_LOCK = threading.Lock()
+
+
+def active_cache() -> TuningCache:
+    """The process-wide cache: a pinned one (``reset_cache(path)``), else
+    whatever ``default_cache_path()`` (env-sensitive) currently names."""
+    global _CACHE
+    with _CACHE_LOCK:
+        if _CACHE_PINNED and _CACHE is not None:
+            return _CACHE
+        if _CACHE is None or _CACHE.path != default_cache_path():
+            _CACHE = TuningCache()
+        return _CACHE
+
+
+def reset_cache(path: Optional[str] = None) -> TuningCache:
+    """Re-point the process cache.  ``path`` pins it to that file
+    (kernelbench's throwaway cache, tests); ``None`` unpins and follows
+    the environment again."""
+    global _CACHE, _CACHE_PINNED
+    with _CACHE_LOCK:
+        _CACHE_PINNED = path is not None
+        _CACHE = TuningCache(path)
+        return _CACHE
+
+
+def lookup(m: int, k: int, n: int, *, dtype: str = "float32",
+           emax_a: int = 7, emax_w: int = 7,
+           quantize: bool = True) -> BlockChoice:
+    """Tuned blocks for a problem: cache hit -> measured, miss -> heuristic."""
+    key = cache_key(m, k, n, dtype=dtype, emax_a=emax_a, emax_w=emax_w,
+                    quantize=quantize)
+    e = active_cache().get(key)
+    if e is not None:
+        # defensive: a hand-edited/truncated entry must degrade to the
+        # heuristic, never error on the matmul hot path; clamp_blocks
+        # additionally floors bk to a legal CANONICAL_BK multiple
+        try:
+            bm, bn, bk = clamp_blocks(
+                m, k, n, int(e["bm"]), int(e["bn"]), int(e["bk"])
+            )
+        except (KeyError, TypeError, ValueError):
+            return heuristic_blocks(m, k, n)
+        return BlockChoice(bm, bn, bk, e.get("source", "measured"),
+                           e.get("us"))
+    return heuristic_blocks(m, k, n)
+
+
+def resolve(m: int, k: int, n: int, bm: Optional[int], bn: Optional[int],
+            bk: Optional[int], *, dtype: str = "float32", emax_a: int = 7,
+            emax_w: int = 7, quantize: bool = True) -> Tuple[int, int, int]:
+    """ops.py entry point: explicit blocks clamp, ``None`` blocks autotune."""
+    if bm is not None and bn is not None and bk is not None:
+        return clamp_blocks(m, k, n, bm, bn, bk)
+    choice = lookup(m, k, n, dtype=dtype, emax_a=emax_a, emax_w=emax_w,
+                    quantize=quantize)
+    return clamp_blocks(
+        m, k, n,
+        bm if bm is not None else choice.bm,
+        bn if bn is not None else choice.bn,
+        bk if bk is not None else choice.bk,
+    )
+
+
+def _time_call(f, iters: int) -> float:
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    jax.block_until_ready(f())  # warmup + compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def tune(m: int, k: int, n: int, *, bits_a: int = 5, bits_w: int = 5,
+         quantize: bool = True, iters: int = 3,
+         interpret: Optional[bool] = None, persist: bool = True,
+         seed: int = 0) -> BlockChoice:
+    """Measure every candidate tiling for one problem and cache the argmin.
+
+    Because the kernel is tiling-invariant (bit-identical output for every
+    candidate), selection is on time alone — no accuracy re-validation is
+    needed.  The heuristic 256^3 default is always a candidate, so the
+    returned choice is never slower than the old fixed default as
+    measured.
+    """
+    from repro.kernels import ops  # lazy: ops imports this module
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
+
+    def run(blocks):
+        bm, bn, bk = blocks
+        if quantize:
+            return lambda: ops.potq_matmul(
+                a, w, bits_a=bits_a, bits_w=bits_w,
+                bm=bm, bn=bn, bk=bk, interpret=interpret,
+            )
+        return lambda: ops.pot_value_matmul(
+            a, w, bm=bm, bn=bn, bk=bk, interpret=interpret
+        )
+
+    default = heuristic_blocks(m, k, n).blocks
+    timings: Dict[Tuple[int, int, int], float] = {}
+    for blocks in candidate_blocks(m, k, n):
+        timings[blocks] = _time_call(run(blocks), iters)
+    best = min(timings, key=lambda b: (timings[b], b))
+    # tie-break toward the known-good default within measurement noise (2%)
+    if timings[default] <= timings[best] * 1.02:
+        best = default
+    key = cache_key(m, k, n, emax_a=potq.pot_emax(bits_a),
+                    emax_w=potq.pot_emax(bits_w), quantize=quantize)
+    # (for quantize=False the emax args are normalized out of the key)
+    entry = {
+        "bm": best[0], "bn": best[1], "bk": best[2],
+        "us": round(timings[best], 2),
+        "default_us": round(timings[default], 2),
+        "source": "measured",
+    }
+    active_cache().put(key, entry, persist=persist)
+    return BlockChoice(*best, "measured", timings[best])
+
+
+# ---------------------------------------------------------------------------
+# Model-level priming (serve/engine.py, launch/train.py)
+# ---------------------------------------------------------------------------
+
+
+def model_matmul_shapes(cfg, *, batch: int, seq: int) -> List[Tuple[int, int, int]]:
+    """Distinct dense-projection (M, K, N) shapes a model step will hit.
+
+    M is the flattened token count (mf_linear collapses leading dims);
+    the entries mirror the per-projection mf_linear calls in
+    models/transformer.py: wq (d -> nh*hd), wk/wv (d -> kv*hd, separate
+    projections — GQA archs have kv_heads != n_heads), wo (nh*hd -> d),
+    the FFN pair, and the LM head.  MoE expert matmuls reuse the FFN
+    shapes with per-expert token slices — the per-expert M varies at
+    runtime, so experts are primed at the dense-FFN shape (same K/N, the
+    dominant cost terms).
+    """
+    m = batch * seq
+    d = cfg.d_model
+    hd = cfg.head_dim
+    shapes = {
+        (m, d, cfg.n_heads * hd),                      # wq
+        (m, d, cfg.kv_heads * hd),                     # wk / wv
+        (m, cfg.n_heads * hd, d),                      # wo
+        (m, d, cfg.d_ff),                              # FFN in (per half)
+        (m, cfg.d_ff, d),                              # FFN out
+        (m, d, cfg.vocab_padded),                      # LM head
+    }
+    if cfg.lru_width:
+        shapes.add((m, d, cfg.lru_width))
+    if cfg.ssm_state:
+        shapes.add((m, d, cfg.d_inner))
+    return sorted(shapes)
+
+
+def prime_for_model(cfg, *, batch: int, seq: int, bits_a: int = 5,
+                    bits_w: int = 5, measure: bool = False, iters: int = 3,
+                    quantize: bool = False,
+                    ) -> List[Tuple[Tuple[int, int, int], BlockChoice]]:
+    """Consult (or, with ``measure=True``, populate) the tuned table for
+    every matmul shape of a model step.  Returns [(shape, choice), ...].
+
+    ``quantize=False`` (default) primes the raw ``pot_value_matmul``
+    path — the one model steps actually dispatch to: core/mfmac.py
+    pre-quantizes operands and calls ``ops.pot_value_matmul``, whose
+    ``autotune.resolve(..., quantize=False)`` keys must match what is
+    primed here.  ``quantize=True`` primes the standalone fused
+    ``ops.potq_matmul`` kernel instead (direct callers / benchmarks).
+    """
+    out = []
+    emax_a = potq.pot_emax(bits_a)
+    emax_w = potq.pot_emax(bits_w)
+    # (cache_key normalizes emax away for the quantize=False path)
+    for (m, k, n) in model_matmul_shapes(cfg, batch=batch, seq=seq):
+        if measure:
+            choice = tune(m, k, n, bits_a=bits_a, bits_w=bits_w,
+                          quantize=quantize, iters=iters)
+        else:
+            choice = lookup(m, k, n, emax_a=emax_a, emax_w=emax_w,
+                            quantize=quantize)
+        out.append(((m, k, n), choice))
+    return out

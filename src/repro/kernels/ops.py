@@ -8,6 +8,10 @@ On this CPU container the kernels run in interpret mode (the Pallas body
 executes in Python); on TPU set ``interpret=False`` (default resolves by
 backend).  Ragged shapes are zero-padded to block multiples — zero padding
 is exact for both the quantizer (0 -> 0) and the matmul.
+
+Block shapes default to ``None`` = consult ``kernels/autotune.py`` (tuned
+cache -> heuristic); the fixed-order reduction makes every tiling
+bit-identical, so tuned and explicit blocks compute the same bits.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import potq
+from repro.kernels import autotune
 from repro.kernels import potq_encode as _ke
 from repro.kernels import potq_matmul as _k
 
@@ -34,14 +39,6 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return x
 
 
-def _pick_blocks(m, n, k, bm, bn, bk):
-    """Clamp block sizes to (padded) problem dims, keep >=8x128 lane tiles."""
-    bm = min(bm, max(8, m))
-    bn = min(bn, max(128, n))
-    bk = min(bk, max(128, k))
-    return bm, bn, bk
-
-
 def potq_matmul(
     a: jax.Array,
     w: jax.Array,
@@ -50,9 +47,9 @@ def potq_matmul(
     bits_w: int = 5,
     w_mean: Optional[jax.Array] = None,
     clip_t: Optional[jax.Array] = None,
-    bm: int = _k.DEFAULT_BM,
-    bn: int = _k.DEFAULT_BN,
-    bk: int = _k.DEFAULT_BK,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Fused ALS-PoTQ quantize + matmul: a(M,K) @ w(K,N) -> (M,N) f32.
@@ -90,11 +87,11 @@ def potq_matmul(
     sw = one(potq.exp2i(-beta_w))
     deq = one(potq.exp2i(beta_a + beta_w))
 
-    ap = _pad_to(a, 8, 128)
-    wp = _pad_to(w, 128, 128)
-    bm_, bn_, bk_ = _pick_blocks(ap.shape[0], wp.shape[1], ap.shape[1], bm, bn, bk)
-    ap = _pad_to(ap, bm_, bk_)
-    wp = _pad_to(wp, bk_, bn_)
+    bm_, bn_, bk_ = autotune.resolve(
+        m, k, n, bm, bn, bk, emax_a=emax_a, emax_w=emax_w, quantize=True
+    )
+    ap = _pad_to(_pad_to(a, 8, 128), bm_, bk_)
+    wp = _pad_to(_pad_to(w, 128, 128), bk_, bn_)
     out = _k.potq_matmul_padded(
         ap,
         wp,
@@ -118,9 +115,9 @@ def pot_value_matmul(
     x: jax.Array,
     y: jax.Array,
     *,
-    bm: int = _k.DEFAULT_BM,
-    bn: int = _k.DEFAULT_BN,
-    bk: int = _k.DEFAULT_BK,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """(M,K)@(K,N) matmul over already-quantized (PoT-valued) operands."""
@@ -131,11 +128,9 @@ def pot_value_matmul(
     m, k = x.shape
     _, n = y.shape
     one = lambda v: jnp.full((1, 1), v, jnp.float32)
-    xp = _pad_to(x, 8, 128)
-    yp = _pad_to(y, 128, 128)
-    bm_, bn_, bk_ = _pick_blocks(xp.shape[0], yp.shape[1], xp.shape[1], bm, bn, bk)
-    xp = _pad_to(xp, bm_, bk_)
-    yp = _pad_to(yp, bk_, bn_)
+    bm_, bn_, bk_ = autotune.resolve(m, k, n, bm, bn, bk, quantize=False)
+    xp = _pad_to(_pad_to(x, 8, 128), bm_, bk_)
+    yp = _pad_to(_pad_to(y, 128, 128), bk_, bn_)
     out = _k.potq_matmul_padded(
         xp,
         yp,

@@ -8,9 +8,22 @@ an FP32 VMEM scratch across the K grid, and dequantized by a single scalar
 block).  No FP32 quantized intermediates ever touch HBM.
 
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the
-accumulator scratch carries across K steps.  Block shapes default to
-MXU-aligned multiples of 128 and are tunable; the ops.py wrapper pads
-ragged shapes.
+accumulator scratch carries across K steps.  Block shapes must be
+MXU-aligned multiples of 128 (bm >= 8) and are tunable; the ops.py wrapper
+pads ragged shapes and consults kernels/autotune.py for block choices.
+
+Determinism contract (docs/DESIGN_kernels.md): the FP32 accumulation is a
+fixed-order reduction over *canonical* K chunks of width ``CANONICAL_BK``,
+independent of the grid's bk.  A bk-wide tile is reduced as bk/CANONICAL_BK
+sequential partial dots, each over exactly CANONICAL_BK columns, added into
+the scratch in increasing global chunk order.  Every tiling therefore
+performs the *same* FP32 additions in the *same* order — the left fold
+acc = ((p_0 + p_1) + p_2) + ... over global chunk index — which is the
+unique bk-independent schedule that needs O(1) scratch (any balanced tree
+would key its combine structure to tile boundaries, i.e. to bk).  Output
+is bit-identical across all (bm, bn, bk) tilings; zero K padding appends
+exact-zero partials and preserves bits (x + 0.0 == x; -0.0 folds to +0.0,
+equal under ==).
 """
 from __future__ import annotations
 
@@ -25,6 +38,18 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 DEFAULT_BK = 256
+
+# Width of one canonical K chunk of the fixed-order reduction.  128 is the
+# MXU systolic dimension and the minimum lane-aligned tile, so every legal
+# bk is a multiple of it.  Defined in kernels/ref.py (the pallas-free
+# numeric spec) so oracle and kernel cannot drift apart.
+from repro.kernels.ref import CANONICAL_BK  # noqa: E402
+
+# Accumulation-scheme tag.  Bump on ANY change to the reduction order or
+# the in-kernel quantizer math — the autotune cache (kernels/autotune.py)
+# keys on it, so stale tuned entries (and any golden outputs derived from
+# the old order) are invalidated automatically.
+ACC_SCHEME = "canonical-k128-leftfold-v1"
 
 
 def _quantize_tile(x, emax: int):
@@ -57,6 +82,7 @@ def _potq_matmul_kernel(
     emax_w: int,
     quantize: bool,
     nk: int,
+    bk: int,
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -73,11 +99,21 @@ def _potq_matmul_kernel(
         wq = _quantize_tile(w * sw_ref[0, 0], emax_w)
     else:
         aq, wq = a, w
-    acc_ref[...] += jnp.dot(
-        aq.astype(jnp.bfloat16),
-        wq.astype(jnp.bfloat16),
-        preferred_element_type=jnp.float32,
-    )
+    ab = aq.astype(jnp.bfloat16)
+    wb = wq.astype(jnp.bfloat16)
+    # Fixed-order reduction: one partial dot per canonical K chunk, added
+    # into the FP32 scratch sequentially.  The grid's K dim is "arbitrary"
+    # (sequential, innermost), so across the whole K axis the additions
+    # happen in increasing global chunk order for EVERY bk — the output is
+    # bit-identical across tilings (see module docstring).
+    for c in range(bk // CANONICAL_BK):
+        lo = c * CANONICAL_BK
+        hi = lo + CANONICAL_BK
+        acc_ref[...] += jnp.dot(
+            ab[:, lo:hi],
+            wb[lo:hi, :],
+            preferred_element_type=jnp.float32,
+        )
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _done():
@@ -120,6 +156,10 @@ def potq_matmul_padded(
         w.shape,
         (bm, bn, bk),
     )
+    assert bk % CANONICAL_BK == 0, (
+        f"bk={bk} must be a multiple of the canonical K chunk "
+        f"({CANONICAL_BK}) for the fixed-order reduction"
+    )
     nk = k // bk
     grid = (m // bm, n // bn, nk)
     scalar_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
@@ -130,6 +170,7 @@ def potq_matmul_padded(
             emax_w=emax_w,
             quantize=quantize,
             nk=nk,
+            bk=bk,
         ),
         grid=grid,
         in_specs=[

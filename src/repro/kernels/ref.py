@@ -1,4 +1,11 @@
-"""Pure-jnp oracles for the Pallas kernels (no pallas imports here)."""
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports here).
+
+These define the repo's *numeric spec*: the Pallas kernel must match them
+bit-for-bit (tests/conformance).  In particular the matmul oracle reduces
+over K in the same canonical fixed order as the kernel (``CANONICAL_BK``
+chunks, left fold), so kernel-vs-oracle equality is exact for every
+tiling — not an accumulation-order accident.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -8,6 +15,12 @@ import jax.numpy as jnp
 
 from repro.core import potq
 from repro.core.potq import exp2i
+
+# Width of one canonical K chunk of the fixed-order FP32 reduction.  The
+# kernel (kernels/potq_matmul.py) imports this — it is the single source
+# of truth for the deterministic accumulation contract
+# (docs/DESIGN_kernels.md).
+CANONICAL_BK = 128
 
 
 def quantize_tile_ref(x: jax.Array, emax: int) -> jax.Array:
@@ -26,12 +39,30 @@ def quantize_tile_ref(x: jax.Array, emax: int) -> jax.Array:
 
 
 def pot_value_matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
-    """(M,K)@(K,N) matmul over PoT-valued operands, bf16 MXU semantics."""
-    return jnp.dot(
-        x.astype(jnp.bfloat16),
-        y.astype(jnp.bfloat16),
-        preferred_element_type=jnp.float32,
-    )
+    """(M,K)@(K,N) matmul over PoT-valued operands, bf16 MXU semantics.
+
+    FP32 accumulation follows the canonical fixed order: K is zero-padded
+    to a multiple of ``CANONICAL_BK``, one bf16 partial dot is taken per
+    canonical chunk, and the partials are left-folded in increasing chunk
+    order.  Zero padding appends exact-zero partials, so the result is
+    independent of the padded length.  This is exactly the reduction the
+    Pallas kernel performs for ANY (bm, bn, bk) tiling.
+    """
+    k = x.shape[1]
+    pad = (-k) % CANONICAL_BK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+    xb = x.astype(jnp.bfloat16)
+    yb = y.astype(jnp.bfloat16)
+    out = jnp.zeros((x.shape[0], y.shape[1]), jnp.float32)
+    for c in range(0, k + pad, CANONICAL_BK):
+        out = out + jnp.dot(
+            xb[:, c:c + CANONICAL_BK],
+            yb[c:c + CANONICAL_BK, :],
+            preferred_element_type=jnp.float32,
+        )
+    return out
 
 
 def potq_matmul_ref(

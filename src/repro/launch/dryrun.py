@@ -106,8 +106,10 @@ def build_train_lowering(cfg, shape, mesh, policy, microbatches=None):
     m = microbatches or MICROBATCHES.get(cfg.name, DEFAULT_MICRO)
     if shape.global_batch % m or (shape.global_batch // m) % plan.fsdp_size():
         m = 1
+    # the step reads the active plan (actshard.use_plan below) for its
+    # microbatch-reshape constraint — no raw mesh argument
     tstep = make_train_step(
-        cfg, policy, opt, TrainConfig(microbatches=m, clip_norm=1.0), mesh=mesh
+        cfg, policy, opt, TrainConfig(microbatches=m, clip_norm=1.0)
     )
     batch_sds = pipeline.batch_specs(cfg, shape)
     param_sh = plan.param_shardings()

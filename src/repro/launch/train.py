@@ -45,6 +45,15 @@ def main(argv=None):
     ap.add_argument("--policy", default="paper",
                     choices=["paper", "fp32", "no_wbc", "no_prc"])
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--pallas", action="store_true",
+                    help="route MF-MAC matmuls through the fused Pallas "
+                         "kernel (interpret mode off-TPU); required for "
+                         "--autotune to have any effect")
+    ap.add_argument("--autotune", default="cache",
+                    choices=["off", "cache", "measure"],
+                    help="kernel block-shape source (with --pallas): tuned "
+                         "cache (default), measure+persist now, or off "
+                         "(heuristic only)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single_pod", "multi_pod"])
     ap.add_argument("--ckpt-dir", default="")
@@ -59,6 +68,8 @@ def main(argv=None):
         "no_wbc": policy_lib.ABLATION_NO_WBC,
         "no_prc": policy_lib.ABLATION_NO_PRC,
     }[args.policy]
+    if args.pallas:
+        policy = dataclasses.replace(policy, use_pallas=True)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
 
     if args.mesh == "host":
@@ -77,9 +88,25 @@ def main(argv=None):
         opt = sgd_momentum(step_decay_schedule(args.lr, [10**9]))
     else:
         opt = adamw(warmup_cosine_schedule(args.lr, 20, args.steps))
+    # Consult the kernel autotuner for this run's matmul shapes (tuned
+    # cache -> heuristic; `measure` benchmarks and persists).  Tiling is
+    # numerics-free (fixed-order reduction), so this only affects speed.
+    if args.autotune != "off" and policy.use_pallas:
+        from repro.kernels import autotune as _autotune
+
+        primed = _autotune.prime_for_model(
+            cfg, batch=args.batch // max(args.microbatches, 1), seq=args.seq,
+            bits_a=policy.bits_a, bits_w=policy.bits_w,
+            measure=args.autotune == "measure",
+        )
+        for (mkn, choice) in primed:
+            print(f"autotune {mkn} -> ({choice.bm},{choice.bn},{choice.bk}) "
+                  f"[{choice.source}]")
+
+    # the step reads the active plan (actshard.use_plan below) for its
+    # microbatch-reshape constraint — no raw mesh argument
     tstep = make_train_step(
-        cfg, policy, opt, TrainConfig(microbatches=args.microbatches),
-        mesh=mesh if args.mesh != "host" else None,
+        cfg, policy, opt, TrainConfig(microbatches=args.microbatches)
     )
 
     param_sh = plan.param_shardings()

@@ -34,6 +34,32 @@ def _plan_batch(plan: ShardingPlan) -> int:
     return plan.shape.global_batch
 
 
+def prime_kernel_autotune(cfg: ModelConfig, policy: QuantPolicy, *,
+                          batch: int, seq: int = 1, measure: bool = False):
+    """Report (or, with ``measure=True``, benchmark and persist) the tuned
+    block choices for this serving step's matmul shapes.
+
+    With ``policy.use_pallas`` the serve-step matmuls already resolve
+    their block shapes through ``kernels/autotune.py`` at trace time
+    (tuned cache -> heuristic) instead of the old fixed 256^3 default;
+    call this before building steps to *see* those choices — log the
+    returned [(shape, BlockChoice), ...] — or to populate the cache on
+    new hardware with ``measure=True`` (the expensive sweep an operator
+    runs once per backend).  Tiling is numerics-free — the kernel's
+    fixed-order reduction is bit-identical across block shapes — so
+    retuning never changes served outputs.  Returns [] when the jnp path
+    is in use.
+    """
+    if not policy.use_pallas:
+        return []
+    from repro.kernels import autotune
+
+    return autotune.prime_for_model(
+        cfg, batch=batch, seq=seq, bits_a=policy.bits_a,
+        bits_w=policy.bits_w, measure=measure,
+    )
+
+
 def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
                       plan: Optional[ShardingPlan] = None):
     def prefill_step(params, batch, cache):

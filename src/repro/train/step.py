@@ -2,7 +2,11 @@
 
 ``make_train_step`` returns a pure function
     (params, opt_state, batch, step) -> (params, opt_state, metrics)
-suitable for ``jax.jit`` with the shardings from repro.parallel.sharding.
+suitable for ``jax.jit`` with the shardings of a validated
+``repro.parallel.planner.ShardingPlan``.  Trace it under
+``actshard.use_plan(plan)``: the step reads the active plan for its
+in-step activation constraints (microbatch reshape) — no raw mesh is
+threaded through.
 
 Microbatching is a ``lax.scan`` over the leading batch split, which bounds
 live activation memory (the grok-1/internvl cells need it to fit
@@ -53,27 +57,38 @@ def _quantize_shadow(params, policy):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def _split_micro(batch, m: int, mesh=None):
+def _split_micro(batch, m: int):
     """(B, ...) -> (m, B/m, ...) with the batch sharding RE-ASSERTED.
 
     Without the explicit constraint the SPMD partitioner can fail to
     propagate the DP sharding through the reshape (m rarely divides the
     data axis) and silently replicates the entire layer stack — observed
     as a 16x flops blow-up in the dry-run HLO.  See EXPERIMENTS.md §Perf.
+
+    The constraint comes from the *active* :class:`ShardingPlan`
+    (``actshard.active_plan()``, set by the launcher / dry-run around
+    tracing) — the plan is the single sharding source end-to-end; no raw
+    mesh is threaded through the step.  With no plan active (CPU tests,
+    single device) the reshape is unconstrained.
     """
-    from repro.parallel import sharding as shd
+    from repro.parallel import actshard
+
+    plan = actshard.active_plan()
 
     def r(x):
         b = x.shape[0]
         assert b % m == 0, (b, m)
         y = x.reshape(m, b // m, *x.shape[1:])
-        if mesh is not None:
-            ps = shd.batch_pspec(
-                mesh, 1, 2 if y.ndim > 2 else None, y.ndim,
+        if plan is not None:
+            sd = 2 if y.ndim > 2 else None
+            ps = plan.activation_pspec(
+                y.ndim,
                 batch_size=b // m,
-                seq_len=y.shape[2] if y.ndim > 2 else None,
+                seq_len=y.shape[2] if sd is not None else None,
+                batch_dim=1,
+                seq_dim=sd,
             )
-            y = shd.constrain(y, mesh, ps)
+            y = jax.lax.with_sharding_constraint(y, plan.named(ps))
         return y
 
     return jax.tree_util.tree_map(r, batch)
@@ -84,7 +99,6 @@ def make_train_step(
     policy: QuantPolicy,
     optimizer: Optimizer,
     tc: TrainConfig = TrainConfig(),
-    mesh=None,
 ):
     use_shadow = tc.weight_shadow and policy.enabled
     loss_policy = (
@@ -102,7 +116,7 @@ def make_train_step(
             params = _quantize_shadow(params, policy)
         m = tc.microbatches
         if m > 1:
-            micros = _split_micro(batch, m, mesh)
+            micros = _split_micro(batch, m)
 
             def acc(carry, micro):
                 loss, grads = jax.value_and_grad(loss_fn)(params, micro)

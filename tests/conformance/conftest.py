@@ -1,0 +1,36 @@
+"""Shared inputs for the cross-path conformance suite.
+
+One set of fixed inputs is driven through every quantized-matmul
+implementation in the repo; the tests assert the conformance matrix of
+docs/DESIGN_kernels.md (bit-exact vs bounded, and why).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+#: >=4 distinct (bm, bn, bk) tilings for the bit-equality sweep — chosen
+#: to vary every block dim, hit 1-chunk and multi-chunk bk, and exercise
+#: grid shapes from 1x1x1 upward.
+TILINGS = [
+    (8, 128, 128),
+    (16, 256, 128),
+    (32, 128, 256),
+    (64, 256, 512),
+    (128, 512, 256),
+]
+
+#: (M, K, N) problem shapes: MXU-aligned and ragged (padding paths).
+SHAPES = [
+    (64, 256, 128),
+    (100, 300, 150),
+    (128, 640, 256),
+]
+
+
+@pytest.fixture(params=SHAPES, ids=lambda s: "x".join(map(str, s)))
+def fixed_inputs(request):
+    m, k, n = request.param
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + k + n), 2)
+    a = jax.random.normal(k1, (m, k), jnp.float32) * 1.7
+    w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
+    return a, w

@@ -1,0 +1,81 @@
+"""Hypothesis property suite: kernel tile quantizer == core.potq, exp2-exact.
+
+Generalizes the deterministic grid of test_quantizer_paths.py to arbitrary
+f32 tensors — subnormals included — and to the kernel's determinism
+contract (tiling invariance on random inputs).  Degrades to skips when the
+optional ``hypothesis`` dev dep is missing (it is installed in CI).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# optional dev dep (requirements-dev.txt): degrade to skips, not a
+# collection error, when hypothesis isn't installed
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import potq
+from repro.kernels import ops, ref
+from repro.kernels.potq_matmul import _quantize_tile
+
+# full-range f32, subnormals allowed: adversarial exponents are the point
+FULL_F32 = hnp.arrays(
+    np.float32,
+    hnp.array_shapes(min_dims=1, max_dims=2, min_side=1, max_side=64),
+    elements=st.floats(
+        width=32, allow_nan=False, allow_infinity=False,
+        allow_subnormal=True,
+    ),
+)
+
+BITS = st.sampled_from([4, 5, 6])
+
+
+@hypothesis.given(FULL_F32, BITS)
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_tile_quantizer_equals_core_potq(f, bits):
+    """_quantize_tile (the kernel body's quantizer) == pot_quantize with
+    beta=0, bit for bit, over the whole f32 domain incl. subnormals."""
+    emax = potq.pot_emax(bits)
+    x = jnp.asarray(f)
+    np.testing.assert_array_equal(
+        np.asarray(_quantize_tile(x, emax)),
+        np.asarray(potq.pot_quantize(x, bits, beta=jnp.int32(0))),
+    )
+
+
+@hypothesis.given(FULL_F32, BITS)
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_tile_quantizer_equals_ref_oracle(f, bits):
+    emax = potq.pot_emax(bits)
+    x = jnp.asarray(f)
+    np.testing.assert_array_equal(
+        np.asarray(_quantize_tile(x, emax)),
+        np.asarray(ref.quantize_tile_ref(x, emax)),
+    )
+
+
+@hypothesis.given(
+    hnp.arrays(
+        np.float32, (32, 256),
+        elements=st.floats(-64.0, 64.0, width=32),
+    ),
+    hnp.arrays(
+        np.float32, (256, 128),
+        elements=st.floats(-1.0, 1.0, width=32),
+    ),
+    st.sampled_from([(8, 128, 128), (16, 128, 256), (32, 128, 128)]),
+)
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_kernel_tiling_invariance_on_random_inputs(a, w, tiling):
+    """Property form of the determinism contract: ANY input, ANY tiling,
+    same bits as the canonical-order oracle."""
+    a = jnp.asarray(a)
+    w = jnp.asarray(w)
+    bm, bn, bk = tiling
+    out = ops.potq_matmul(a, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.potq_matmul_ref(a, w))
+    )

@@ -1,0 +1,95 @@
+"""Quantizer conformance: every PoT quantizer implementation in the repo
+computes the same exp2-exact function, checked on an adversarial
+deterministic exponent grid (subnormals, +-emax edges, zero, half-way
+rounding points).  The hypothesis-backed generalization lives in
+test_property_quantize.py; this grid always runs (no optional deps).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import potq
+from repro.kernels import ref
+from repro.kernels.potq_matmul import _quantize_tile
+
+BITS = [4, 5, 6]
+
+
+def adversarial_grid() -> np.ndarray:
+    """f32 values stressing every quantizer branch: exact powers of two
+    across the full exponent range (subnormal through huge), half-way
+    points between PoT grid steps (sqrt(2)*2^e, the round-to-nearest
+    boundary in log2), values just in/out of the +-emax window, zeros."""
+    es = np.arange(-149, 128, dtype=np.float64)
+    pots = np.power(2.0, es)
+    halfway = pots * np.sqrt(2.0)
+    near = np.concatenate([pots * 0.999, pots * 1.001])
+    vals = np.concatenate(
+        [[0.0, -0.0], pots, -pots, halfway, -halfway, near,
+         [np.finfo(np.float32).tiny, np.finfo(np.float32).max,
+          np.float64(np.finfo(np.float32).smallest_subnormal)]]
+    ).astype(np.float32)
+    return vals[np.isfinite(vals)]
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_tile_quantizer_equals_ref(bits):
+    emax = potq.pot_emax(bits)
+    x = jnp.asarray(adversarial_grid())
+    np.testing.assert_array_equal(
+        np.asarray(_quantize_tile(x, emax)),
+        np.asarray(ref.quantize_tile_ref(x, emax)),
+    )
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_tile_quantizer_equals_core_potq(bits):
+    """_quantize_tile operates in the scaled (beta-removed) domain;
+    pot_quantize with beta pinned to 0 is the same function."""
+    emax = potq.pot_emax(bits)
+    x = jnp.asarray(adversarial_grid())
+    np.testing.assert_array_equal(
+        np.asarray(_quantize_tile(x, emax)),
+        np.asarray(potq.pot_quantize(x, bits, beta=jnp.int32(0))),
+    )
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_scaled_quantizer_consistent_with_core(bits):
+    """Full path with a nonzero layer scale: quantizing f via core.potq
+    equals scaling, tile-quantizing, and unscaling — PoT scaling is exact,
+    so the round trip through the scaled domain loses nothing."""
+    emax = potq.pot_emax(bits)
+    # keep beta small enough that 2^(e+beta) stays in normal f32 range
+    f = jnp.asarray(
+        np.concatenate(
+            [adversarial_grid()[np.abs(adversarial_grid()) < 1e30],
+             np.zeros(1, np.float32)]
+        )
+    )
+    beta = potq.compute_beta(f, bits)
+    scaled_q = _quantize_tile(f * potq.exp2i(-beta), emax)
+    np.testing.assert_array_equal(
+        np.asarray(scaled_q * potq.exp2i(beta)),
+        np.asarray(potq.pot_quantize(f, bits, beta)),
+    )
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantized_values_exact_in_bf16(bits):
+    """The DESIGN §2 claim the serve path relies on: every quantized value
+    survives a bf16 round trip bit-for-bit."""
+    emax = potq.pot_emax(bits)
+    q = _quantize_tile(jnp.asarray(adversarial_grid()), emax)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(q.astype(jnp.bfloat16).astype(jnp.float32))
+    )
+
+
+def test_exp2i_exact_against_ldexp():
+    es = np.arange(-126, 128, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(potq.exp2i(jnp.asarray(es))),
+        np.ldexp(np.float32(1.0), es),
+    )

@@ -5,3 +5,19 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Keep tests hermetic: never read/write the user's on-disk tuned-block
+    cache.  Block choice cannot change numerics (the kernel's fixed-order
+    reduction is tiling-invariant) — this only isolates *which* tiling
+    runs, and the cache files tests create."""
+    import sys
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    # a previous test may have PINNED the process cache (reset_cache(path));
+    # unpin so this test's env isolation takes effect
+    mod = sys.modules.get("repro.kernels.autotune")
+    if mod is not None:
+        mod.reset_cache(None)

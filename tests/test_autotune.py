@@ -1,0 +1,211 @@
+"""Autotune subsystem: cache format/invalidation, candidate generation,
+resolution order (explicit > tuned > heuristic), and measured tuning."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.kernels import potq_matmul as K
+
+
+def _use(tmp_path, name=None):
+    # adopt the per-test path the conftest autouse fixture exported, so
+    # active_cache() (which re-resolves from the env) stays consistent
+    path = autotune.default_cache_path() if name is None else str(tmp_path / name)
+    return autotune.reset_cache(path), path
+
+
+def test_heuristic_matches_old_default_clamp():
+    """The miss path reproduces the pre-autotune fixed-256^3 clamping, so
+    behavior without a cache is exactly the old behavior."""
+    c = autotune.heuristic_blocks(512, 512, 512)
+    assert c.blocks == (256, 256, 256) and c.source == "heuristic"
+    assert autotune.heuristic_blocks(8, 128, 128).blocks == (8, 128, 128)
+    # ragged dims clamp against the PADDED problem
+    assert autotune.heuristic_blocks(100, 200, 150).blocks == (104, 256, 256)
+
+
+def test_candidates_are_legal_and_include_default():
+    for shape in [(8, 128, 128), (512, 512, 512), (100, 640, 300)]:
+        cands = autotune.candidate_blocks(*shape)
+        assert autotune.heuristic_blocks(*shape).blocks in cands
+        for (bm, bn, bk) in cands:
+            assert bk % K.CANONICAL_BK == 0  # fixed-order reduction legal
+            assert bm >= 8 and bn >= 128
+            assert autotune.vmem_block_bytes(bm, bn, bk) <= autotune.VMEM_BUDGET_BYTES
+
+
+def test_cache_roundtrip_and_resolution(tmp_path):
+    cache, path = _use(tmp_path)
+    key = autotune.cache_key(64, 256, 128)
+    assert autotune.lookup(64, 256, 128).source == "heuristic"
+    cache.put(key, {"bm": 64, "bn": 128, "bk": 256, "us": 1.0,
+                    "source": "measured"})
+    got = autotune.lookup(64, 256, 128)
+    assert got.blocks == (64, 128, 256) and got.source == "measured"
+    # a fresh cache object re-reads the same file
+    fresh = autotune.reset_cache(path)
+    assert fresh.get(key)["bm"] == 64
+    # resolution order: explicit overrides beat the tuned entry
+    assert autotune.resolve(64, 256, 128, 8, 128, 128) == (8, 128, 128)
+    assert autotune.resolve(64, 256, 128, None, None, None) == (64, 128, 256)
+
+
+def test_cache_key_binds_problem_and_backend():
+    k1 = autotune.cache_key(64, 256, 128)
+    assert autotune.cache_key(64, 256, 128) == k1
+    assert autotune.cache_key(64, 256, 256) != k1
+    assert autotune.cache_key(64, 256, 128, quantize=False) != k1
+    assert autotune.cache_key(64, 256, 128, emax_a=3) != k1
+    assert autotune.cache_key(64, 256, 128, backend="tpu") != k1
+    # padding-equivalent problems share an entry
+    assert autotune.cache_key(63, 250, 127) == autotune.cache_key(64, 256, 128)
+
+
+def test_stale_scheme_invalidates_cache(tmp_path):
+    """A cache written under a different accumulation scheme must be
+    discarded wholesale: the scheme defines the numerics and the cost
+    model (docs/DESIGN_kernels.md)."""
+    _, path = _use(tmp_path)
+    key = autotune.cache_key(64, 256, 128)
+    stale = {
+        "format": autotune.CACHE_FORMAT,
+        "scheme": "some-older-accumulation-order",
+        "entries": {key: {"bm": 8, "bn": 128, "bk": 128, "source": "measured"}},
+    }
+    with open(path, "w") as f:
+        json.dump(stale, f)
+    cache = autotune.reset_cache(path)
+    assert cache.get(key) is None
+    assert autotune.lookup(64, 256, 128).source == "heuristic"
+    # writing a new entry re-tags the file with the current scheme
+    cache.put(key, {"bm": 64, "bn": 128, "bk": 128, "source": "measured"})
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["scheme"] == K.ACC_SCHEME
+
+
+def test_put_merges_with_concurrent_writers(tmp_path):
+    """Persisting must merge with the file's CURRENT contents: two tuner
+    processes sharing one cache may not drop each other's measured
+    entries (lost update)."""
+    cache, path = _use(tmp_path)
+    k1 = autotune.cache_key(8, 128, 128)
+    cache.put(k1, {"bm": 8, "bn": 128, "bk": 128, "source": "measured"})
+    # a second process persists its own entry to the same file
+    other = autotune.TuningCache(path)
+    k2 = autotune.cache_key(16, 128, 128)
+    other.put(k2, {"bm": 16, "bn": 128, "bk": 128, "source": "measured"})
+    # the first cache writes again from its (stale) in-memory view —
+    # the second writer's entry must survive
+    k3 = autotune.cache_key(32, 128, 128)
+    cache.put(k3, {"bm": 32, "bn": 128, "bk": 128, "source": "measured"})
+    final = autotune.TuningCache(path)
+    assert final.get(k1) and final.get(k2) and final.get(k3)
+
+
+def test_malformed_entry_degrades_to_heuristic(tmp_path):
+    """Hand-edited entries with missing/garbage fields must fall back to
+    the heuristic, never raise on the matmul hot path."""
+    cache, _ = _use(tmp_path)
+    key = autotune.cache_key(64, 256, 128)
+    cache.put(key, {"bm": 64, "bn": 128}, persist=False)  # missing bk
+    assert autotune.lookup(64, 256, 128).source == "heuristic"
+    cache.put(key, {"bm": "junk", "bn": 128, "bk": 128}, persist=False)
+    assert autotune.lookup(64, 256, 128).source == "heuristic"
+    cache.put(key, {"bm": 64, "bn": 128, "bk": 100}, persist=False)
+    # non-canonical bk floors to a legal multiple instead of crashing
+    assert autotune.lookup(64, 256, 128).blocks[2] % 128 == 0
+
+
+def test_corrupt_cache_degrades_to_heuristic(tmp_path):
+    _, path = _use(tmp_path)
+    with open(path, "w") as f:
+        f.write("{not json")
+    autotune.reset_cache(path)
+    assert autotune.lookup(64, 256, 128).source == "heuristic"
+
+
+def test_tune_measures_persists_and_never_regresses(tmp_path):
+    cache, path = _use(tmp_path)
+    choice = autotune.tune(32, 256, 128, iters=1, interpret=True)
+    entry = cache.get(autotune.cache_key(32, 256, 128))
+    assert entry is not None and entry["source"] == "measured"
+    # acceptance: the tuned pick is no slower than the old fixed default
+    assert entry["us"] <= entry["default_us"]
+    assert choice.blocks == (entry["bm"], entry["bn"], entry["bk"])
+    # and ops now consults it on the miss-free path
+    assert autotune.resolve(32, 256, 128, None, None, None) == choice.blocks
+
+
+def test_model_priming_covers_step_shapes(tmp_path):
+    from repro import configs as C
+
+    _use(tmp_path)
+    cfg = C.get_config("olmo-1b")
+    primed = autotune.prime_for_model(cfg, batch=8, seq=1)
+    shapes = [s for s, _ in primed]
+    m = 8
+    hd = cfg.head_dim
+    # the per-projection mf_linear shapes models/transformer.py executes
+    assert (m, cfg.d_model, cfg.n_heads * hd) in shapes       # wq
+    assert (m, cfg.d_model, cfg.kv_heads * hd) in shapes      # wk / wv
+    assert (m, cfg.n_heads * hd, cfg.d_model) in shapes       # wo
+    assert (m, cfg.d_model, cfg.d_ff) in shapes
+    assert (m, cfg.d_ff, cfg.d_model) in shapes
+    assert (m, cfg.d_model, cfg.vocab_padded) in shapes
+    assert all(c.source == "heuristic" for _, c in primed)  # cold cache
+
+    # a GQA arch (kv_heads != n_heads) primes the separate wk/wv shape
+    gqa = C.get_config("llama3-8b")
+    assert gqa.kv_heads != gqa.n_heads
+    gshapes = [s for s, _ in autotune.prime_for_model(gqa, batch=4, seq=1)]
+    assert (4, gqa.d_model, gqa.kv_heads * gqa.head_dim) in gshapes
+    assert (4, gqa.n_heads * gqa.head_dim, gqa.d_model) in gshapes
+
+
+def test_primed_entries_hit_model_dispatch_path(tmp_path):
+    """prime_for_model writes the SAME cache keys ops.pot_value_matmul
+    reads: model steps (core/mfmac.py with use_pallas) dispatch
+    pre-quantized operands through the quantize=False path, so primed /
+    measured entries must land on those keys or tuning has no effect."""
+    from repro import configs as C
+
+    cache, _ = _use(tmp_path)
+    cfg = C.smoke_config("olmo-1b")
+    shapes = autotune.model_matmul_shapes(cfg, batch=8, seq=1)
+    m, k, n = shapes[0]
+    raw_key = autotune.cache_key(m, k, n, quantize=False)
+    cache.put(raw_key, {"bm": 8, "bn": 128, "bk": 128, "source": "measured"})
+    # the exact resolve call ops.pot_value_matmul makes:
+    assert autotune.resolve(m, k, n, None, None, None, quantize=False) == (
+        8, 128, 128
+    )
+    # emax is normalized out of raw keys: any policy bits share the entry
+    assert autotune.cache_key(
+        m, k, n, quantize=False, emax_a=3, emax_w=3
+    ) == raw_key
+    # prime_for_model (raw path by default) consumes the planted entry
+    primed = dict(autotune.prime_for_model(cfg, batch=8, seq=1))
+    assert primed[(m, k, n)].source == "measured"
+    assert primed[(m, k, n)].blocks == (8, 128, 128)
+
+
+def test_tuned_blocks_bit_identical_through_ops(tmp_path):
+    """Planting ANY legal tuned entry cannot change ops.potq_matmul bits —
+    the whole point of the fixed-order reduction."""
+    cache, _ = _use(tmp_path)
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 384))
+    w = jax.random.normal(jax.random.PRNGKey(1), (384, 128)) * 0.1
+    base = np.asarray(ops.potq_matmul(a, w, interpret=True))
+    for blocks in [(8, 128, 128), (64, 128, 384)]:
+        cache.put(
+            autotune.cache_key(64, 384, 128),
+            {"bm": blocks[0], "bn": blocks[1], "bk": blocks[2],
+             "source": "measured"},
+        )
+        out = np.asarray(ops.potq_matmul(a, w, interpret=True))
+        np.testing.assert_array_equal(out, base)

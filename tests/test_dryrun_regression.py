@@ -1,0 +1,145 @@
+"""Dry-run sweep regression: the committed (arch x shape x mesh) roofline
+fixture must stay complete, and recomputed cells must not drift.
+
+The fixture (tests/fixtures/dryrun_sweep.json) was captured by running
+the full ``launch/dryrun.py`` matrix after the planner rewire
+(train/step.py consuming the active ShardingPlan).  Tier-1 recomputes a
+small, fast cell subset in a subprocess (dryrun needs its own process:
+the 512-device XLA host-platform flag locks on first jax init) and fails
+on > 5 % flops/bytes drift.  ``REPRO_FULL_DRYRUN=1`` re-checks every
+cell (CI uploads the fresh sweep as an artifact for trend tracking).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURE = os.path.join(REPO, "tests", "fixtures", "dryrun_sweep.json")
+
+DRIFT = 0.05
+#: numeric fields compared cell-by-cell (flops + memory-traffic terms)
+DRIFT_FIELDS = [
+    ("flops",),
+    ("bytes_accessed",),
+    ("weighted", "flops"),
+    ("weighted", "hbm_bytes"),
+    ("weighted", "collective_bytes"),
+]
+ARCH_COUNT = 10
+SHAPE_NAMES = {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+
+#: tier-1 recomputation subset: small arch, one serve + one train cell
+#: (the two lowering paths the planner rewire touched), single-pod mesh
+SMALL_CELLS = [("olmo-1b", "decode_32k"), ("olmo-1b", "train_4k")]
+
+
+def _load_fixture():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def _cell_index(records):
+    return {(r["arch"], r["shape"], bool(r["multi_pod"])): r for r in records}
+
+
+def _get(rec, path):
+    v = rec
+    for p in path:
+        if not isinstance(v, dict) or p not in v:
+            return None
+        v = v[p]
+    return v
+
+
+def _run_dryrun(args, out_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args, "--out", out_path],
+        check=True, cwd=REPO, env=env,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        timeout=1800,
+    )
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def _assert_no_drift(fresh_records, fixture_index, where):
+    problems = []
+    for rec in fresh_records:
+        key = (rec["arch"], rec["shape"], bool(rec["multi_pod"]))
+        old = fixture_index.get(key)
+        assert old is not None, f"{where}: cell {key} missing from fixture"
+        if rec["status"] != "ok" or old["status"] != "ok":
+            assert rec["status"] == old["status"], (key, rec["status"],
+                                                    old["status"])
+            continue
+        for path in DRIFT_FIELDS:
+            new_v, old_v = _get(rec, path), _get(old, path)
+            if new_v is None or old_v is None:
+                continue
+            denom = max(abs(old_v), 1.0)
+            drift = abs(new_v - old_v) / denom
+            if drift > DRIFT:
+                problems.append((key, ".".join(path), old_v, new_v,
+                                 f"{drift:.1%}"))
+    assert not problems, (
+        f"{where}: flops/bytes drifted > {DRIFT:.0%} vs committed fixture "
+        f"(rerun launch/dryrun.py and re-commit if intentional):\n"
+        + "\n".join(map(str, problems))
+    )
+
+
+def test_fixture_covers_full_matrix():
+    records = _load_fixture()
+    idx = _cell_index(records)
+    archs = {a for a, _, _ in idx}
+    shapes = {s for _, s, _ in idx}
+    meshes = {m for _, _, m in idx}
+    assert len(archs) == ARCH_COUNT, sorted(archs)
+    assert shapes == SHAPE_NAMES
+    assert meshes == {False, True}
+    assert len(idx) == ARCH_COUNT * len(SHAPE_NAMES) * 2
+    # no silent failures committed: every cell is ok or an explicit
+    # by-design skip (full attention @512k)
+    for key, r in idx.items():
+        assert r["status"] == "ok" or r["status"].startswith("skipped"), (
+            key, r["status"]
+        )
+    ok = [r for r in records if r["status"] == "ok"]
+    assert len(ok) >= 60
+    for r in ok:
+        assert r.get("flops") is not None, (r["arch"], r["shape"])
+        assert r.get("bytes_accessed") is not None
+        assert r.get("memory", {}).get("argument_size_in_bytes") is not None
+
+
+def test_small_cells_no_flops_bytes_drift(tmp_path):
+    """Recompute two fast single-pod cells end-to-end and compare against
+    the committed fixture: >5% drift in any flops/bytes term fails."""
+    idx = _cell_index(_load_fixture())
+    for arch, shape in SMALL_CELLS:
+        fresh = _run_dryrun(
+            ["--arch", arch, "--shape", shape],
+            str(tmp_path / f"{arch}_{shape}.json"),
+        )
+        assert len(fresh) == 1 and fresh[0]["status"] == "ok"
+        _assert_no_drift(fresh, idx, f"{arch}x{shape}")
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(
+    not os.environ.get("REPRO_FULL_DRYRUN"),
+    reason="full 80-cell sweep; set REPRO_FULL_DRYRUN=1 (CI artifact job)",
+)
+def test_full_matrix_no_drift(tmp_path):
+    fresh = _run_dryrun(
+        ["--arch", "all", "--shape", "all", "--both-meshes"],
+        str(tmp_path / "sweep.json"),
+    )
+    _assert_no_drift(fresh, _cell_index(_load_fixture()), "full sweep")

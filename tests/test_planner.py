@@ -90,6 +90,60 @@ def test_plan_summary_mentions_every_leaf():
 
 
 # ---------------------------------------------------------------------------
+# train/step.py consumes the ACTIVE plan (actshard.active_plan()) — the
+# plan is the single sharding source end-to-end; no raw mesh= argument.
+# ---------------------------------------------------------------------------
+
+
+def test_split_micro_consumes_active_plan(monkeypatch):
+    import inspect
+
+    import jax.numpy as jnp
+
+    from repro.parallel import actshard
+    from repro.train import step as train_step_mod
+
+    # the raw mesh= escape hatch is gone from the public factory
+    assert "mesh" not in inspect.signature(
+        train_step_mod.make_train_step
+    ).parameters
+    assert "mesh" not in inspect.signature(
+        train_step_mod._split_micro
+    ).parameters
+
+    mesh = meshes.make_production_mesh(abstract=True)  # (16, 16)
+    plan = planner.plan_for(C.get_config("olmo-1b"), mesh)
+    batch = {"tokens": jnp.zeros((32, 8), jnp.int32)}
+
+    seen = []
+
+    def spy(x, sharding):
+        seen.append(sharding)
+        return x
+
+    monkeypatch.setattr(jax.lax, "with_sharding_constraint", spy)
+
+    # no active plan -> unconstrained reshape (CPU tests / single device)
+    micros = train_step_mod._split_micro(batch, 2)
+    assert micros["tokens"].shape == (2, 16, 8)
+    assert seen == []
+
+    # active plan -> the microbatch reshape is pinned with the PLAN's
+    # activation rule (batch dim 1 -> fsdp axes, seq dim 2 -> model)
+    with actshard.use_plan(plan):
+        micros = train_step_mod._split_micro(batch, 2)
+    assert micros["tokens"].shape == (2, 16, 8)
+    assert len(seen) == 1
+    (ns,) = seen
+    assert isinstance(ns, NamedSharding) and ns.mesh is mesh
+    assert ns.spec == plan.activation_pspec(
+        3, batch_size=16, seq_len=8, batch_dim=1, seq_dim=2
+    )
+    # and that rule actually shards the batch dim on the production mesh
+    assert tuple(ns.spec)[1] == "data"
+
+
+# ---------------------------------------------------------------------------
 # Mesh compat shim regression: pin behavior under BOTH AbstractMesh call
 # signatures, independent of which one the installed JAX uses.
 # ---------------------------------------------------------------------------
