@@ -13,7 +13,16 @@ report tuned-vs-default time.  ``speedup_x >= 1.0`` is guaranteed by the
 argmin (ties break toward the default), and the fixed-order reduction
 makes every tiling bit-identical, so the tuned choice is a pure win.
 
-``--json out.json`` dumps all rows (CI uploads this as an artifact).
+Backward section: ``potq_grad_fused_*`` rows time the fused backward
+(ops.potq_grad_matmuls — G quantized once in VMEM, transposed-operand
+BlockSpecs, fused PRC epilogue; grad_da/grad_dw blocks autotuned first)
+against the composed pre-fusion path (standalone jnp G quantization, two
+pot_value_matmul launches over materialized ``.T`` copies, jnp PRC
+epilogue).  Both compute the same gradients up to documented ulp bounds;
+the row reports fused-vs-composed time and flags any fused regression.
+
+``--json out.json`` dumps all rows (CI uploads this as an artifact —
+the backward rows ride along automatically).
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import mfmac, potq
 from repro.core.policy import FP32_BASELINE, PAPER_FAITHFUL
-from repro.kernels import autotune
+from repro.kernels import autotune, ops
 from repro.kernels import potq_matmul as K
 
 #: matmul shapes the tune-aware section benchmarks (kept small enough for
@@ -37,14 +46,23 @@ TUNED_SHAPES = [
     (512, 512, 512),
 ]
 
+#: forward (M, K, N) problems whose backward pair the grad section times
+GRAD_SHAPES = [
+    (256, 256, 256),
+    (256, 512, 256),
+]
+
 
 def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
+    """Best-of-iters wall time in us (min filters scheduler noise, which
+    dominates interpret-mode runs on a shared CPU)."""
+    jax.block_until_ready(f(*args))  # warmup + compile
+    best = float("inf")
     for _ in range(iters):
-        out = f(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
 def vmem_block_bytes(bm, bn, bk):
@@ -95,6 +113,56 @@ def run(tune_iters: int = 2, persist: bool = False):
             f"default_us={default_us:.1f} "
             f"speedup_x={default_us/max(tuned_us,1e-9):.2f} "
             f"no_slower_than_default={'yes' if tuned_us <= default_us else 'NO'}",
+        ))
+
+    # -- fused backward vs the composed pre-fusion path -------------------
+    gamma = 0.95
+    for (gm, gk, gn) in GRAD_SHAPES:
+        ka, kw, kg = jax.random.split(jax.random.PRNGKey(gm + gn), 3)
+        ar = jax.random.normal(ka, (gm, gk))
+        amax = jnp.max(jnp.abs(ar))
+        clip_t = amax * gamma
+        aq = potq.pot_quantize(jnp.clip(ar, -clip_t, clip_t), 5)
+        wq = potq.pot_quantize(
+            jax.random.normal(kw, (gk, gn)) * 0.05, 5)
+        gr = jax.random.normal(kg, (gm, gn)) * 1e-3
+        # tune both backward kernels AND the composed path's raw-matmul
+        # keys first (same persist policy as the forward rows) — both
+        # sides run their best tiling, so the row measures fusion alone,
+        # not tuned-vs-untuned blocks
+        autotune.tune(gm, gn, gk, iters=tune_iters, persist=persist,
+                      op="grad_da")
+        autotune.tune(gk, gm, gn, iters=tune_iters, persist=persist,
+                      op="grad_dw")
+        autotune.tune(gm, gn, gk, iters=tune_iters, persist=persist,
+                      quantize=False)
+        autotune.tune(gk, gm, gn, iters=tune_iters, persist=persist,
+                      quantize=False)
+
+        def fused():
+            return ops.potq_grad_matmuls(
+                gr, aq, wq, a=ar, clip_t=clip_t, amax=amax)
+
+        def composed():
+            # the pre-fusion backward: standalone quantize, materialized
+            # transposes, two raw matmul launches, jnp epilogue
+            gq = potq.pot_quantize(gr, 5)
+            da = ops.pot_value_matmul(gq, wq.T)
+            dw = ops.pot_value_matmul(aq.T, gq)
+            clipped = jnp.abs(ar) > clip_t
+            dgamma = jnp.sum(
+                jnp.where(clipped, da * jnp.sign(ar), 0.0)) * amax
+            da = jnp.where(clipped, 0.0, da)
+            return da, dw, dgamma
+
+        fused_us = _time(fused)
+        composed_us = _time(composed)
+        rows.append((
+            f"potq_grad_fused_{gm}x{gk}x{gn}", fused_us,
+            f"composed_us={composed_us:.1f} "
+            f"speedup_x={composed_us/max(fused_us,1e-9):.2f} "
+            f"fused_le_composed="
+            f"{'yes' if fused_us <= composed_us else 'NO'}",
         ))
     return rows
 

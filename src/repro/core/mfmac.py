@@ -24,8 +24,11 @@ PoT values — bit-identical to the paper's INT4-add + XOR datapath because
 every 5-bit PoT value is exact in bf16 (DESIGN.md §2).  Accumulation is
 FP32 (MXU) vs the paper's INT32; tests bound the deviation.
 
-``policy.use_pallas`` routes the three MACs through the fused Pallas TPU
-kernel (repro.kernels.ops) instead of jnp — same math, fused quantize.
+``policy.use_pallas`` routes the forward MACs through the fused Pallas
+TPU kernel (repro.kernels.ops) instead of jnp — same math, fused quantize
+— and the backward through ``ops.potq_grad_matmuls``: G quantized once in
+VMEM, transposed operands expressed as BlockSpec index maps (no ``.T``
+copies), PRC clip-mask + dgamma reduction fused as the kernel epilogue.
 """
 from __future__ import annotations
 
@@ -117,6 +120,28 @@ def _mf_linear_fwd(policy, is_last, a, w, gamma):
 def _mf_linear_bwd(policy, is_last, res, g):
     aq, wq, a, gamma = res
     k, n = wq.shape
+    if policy.use_pallas:
+        # Fused backward kernels: G quantized once IN VMEM, transposed
+        # operands via BlockSpec index maps (no materialized .T copies),
+        # PRC clip-mask + dgamma reduction fused as the output epilogue.
+        from repro.kernels import ops
+
+        bits = policy.bits_g_last if is_last else policy.bits_g
+        g2 = g.astype(jnp.float32).reshape(-1, n)
+        aq2 = aq.reshape(-1, k)
+        if policy.prc_enabled:
+            a32 = a.astype(jnp.float32)
+            amax = jnp.max(jnp.abs(a32))
+            da, dw, dgamma = ops.potq_grad_matmuls(
+                g2, aq2, wq, a=a32.reshape(-1, k),
+                clip_t=amax * gamma, amax=amax, bits_g=bits,
+            )
+            dgamma = dgamma.reshape(gamma.shape).astype(gamma.dtype)
+        else:
+            da, dw, _ = ops.potq_grad_matmuls(g2, aq2, wq, bits_g=bits)
+            dgamma = jnp.zeros_like(gamma)
+        return (da.reshape(a.shape).astype(a.dtype),
+                dw.astype(jnp.float32), dgamma)
     gq = _quantize_g(g, policy, is_last)  # quantized ONCE, reused (line 13)
     g2 = gq.reshape(-1, n)
     # dA = Gq @ Wq^T   (line 14)
@@ -189,6 +214,33 @@ def _mf_expert_fwd(policy, a, w, gamma):
 
 def _mf_expert_bwd(policy, res, g):
     aq, wq, a, gamma = res
+    if policy.use_pallas:
+        # vmap the fused backward over experts: per-expert beta_g / clip
+        # thresholds / dgamma partials, each expert its own "layer".
+        from repro.kernels import ops
+
+        g32 = g.astype(jnp.float32)
+        a32 = a.astype(jnp.float32)
+        if policy.prc_enabled:
+            amax = jnp.max(jnp.abs(a32), axis=(1, 2))  # (E,)
+
+            def one(ge, aqe, wqe, ae, ame):
+                return ops.potq_grad_matmuls(
+                    ge, aqe, wqe, a=ae, clip_t=ame * gamma, amax=ame,
+                    bits_g=policy.bits_g,
+                )
+
+            da, dw, dg = jax.vmap(one)(g32, aq, wq, a32, amax)
+            dgamma = jnp.sum(dg).reshape(gamma.shape).astype(gamma.dtype)
+        else:
+            def one(ge, aqe, wqe):
+                return ops.potq_grad_matmuls(
+                    ge, aqe, wqe, bits_g=policy.bits_g
+                )
+
+            da, dw, _ = jax.vmap(one)(g32, aq, wq)
+            dgamma = jnp.zeros_like(gamma)
+        return da.astype(a.dtype), dw.astype(jnp.float32), dgamma
     gq = _quantize_g(g, policy, False, axes=(1, 2))
     # dA[e] = Gq[e] @ Wq[e]^T
     da = _expert_bmm(gq, jnp.swapaxes(wq, 1, 2), policy)

@@ -24,10 +24,12 @@ Cache format (JSON, one file):
      "entries": {"<key>": {"bm":..,"bn":..,"bk":..,"us":..,
                             "default_us":.., "source":"measured"}}}
 
-Keys bind the *problem*: padded (m, k, n), kernel operand dtype (ops.py
-casts inputs to f32 before the kernel, so this is always "float32" today
-— the field exists so a future bf16-operand kernel re-tunes instead of
-reusing f32 timings), (emax_a, emax_w), quantize flag, and jax backend.
+Keys bind the *problem*: the operation tag (``potq_matmul`` forward /
+raw, ``grad_da`` / ``grad_dw`` fused backward MACs — see ``OPS``), padded
+(m, k, n), kernel operand dtype (ops.py casts inputs to f32 before the
+kernel, so this is always "float32" today — the field exists so a future
+bf16-operand kernel re-tunes instead of reusing f32 timings),
+(emax_a, emax_w), quantize flag, and jax backend.
 Invalidation is by construction:
 a cache whose ``scheme`` or ``format`` doesn't match the running kernel is
 discarded wholesale (the accumulation order defines the numerics AND the
@@ -68,13 +70,28 @@ def default_cache_path() -> str:
     )
 
 
-def vmem_block_bytes(bm: int, bn: int, bk: int) -> int:
-    """VMEM working set of one grid step of the fused kernel."""
-    a = bm * bk * 4
-    w = bk * bn * 4
+#: operation tags the tuner knows about.  ``potq_matmul`` is the fused
+#: forward (and the raw pot_value path); ``grad_da`` (PRC epilogue on) /
+#: ``grad_da_raw`` (epilogue off — different VMEM footprint, so its own
+#: tag) / ``grad_dw`` are the fused backward MACs (kernels/potq_grad.py).
+#: (m, k, n) is always the *matmul* problem — rows, contraction, cols —
+#: so for grad_da that is (M_tokens, N_out, K_in) and for grad_dw
+#: (K_in, M_tokens, N_out).
+OPS = ("potq_matmul", "grad_da", "grad_da_raw", "grad_dw")
+
+
+def vmem_block_bytes(bm: int, bn: int, bk: int,
+                     op: str = "potq_matmul") -> int:
+    """VMEM working set of one grid step of the given fused kernel."""
+    lhs = bm * bk * 4
+    rhs = bk * bn * 4
     acc = bm * bn * 4
     bf16_copies = (bm * bk + bk * bn) * 2
-    return a + w + acc + bf16_copies
+    total = lhs + rhs + acc + bf16_copies
+    if op == "grad_da":
+        # PRC epilogue: raw-a tile + dgamma row-partial scratch/output
+        total += bm * bn * 4 + 2 * bm * 128 * 4
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,64 +107,95 @@ class BlockChoice:
         return (self.bm, self.bn, self.bk)
 
 
-def _pad_dims(m: int, k: int, n: int) -> Tuple[int, int, int]:
-    """Problem dims after ops.py's minimum lane padding (8, 128, 128)."""
-    return (m + (-m) % 8, k + (-k) % 128, n + (-n) % 128)
+def _row_granularity(op: str) -> int:
+    """Minimum / alignment granularity of the bm (output rows) dim.
+
+    The forward kernel and grad_da tile M (sublane dim, >=8); grad_dw's
+    output rows are K — the *lane* dim of the Aq operand it streams in
+    natural (M, K) layout — so its bm must be a 128-aligned lane tile.
+    """
+    return 128 if op == "grad_dw" else 8
+
+
+def _pad_dims(m: int, k: int, n: int,
+              op: str = "potq_matmul") -> Tuple[int, int, int]:
+    """Problem dims after ops.py's minimum lane padding."""
+    rg = _row_granularity(op)
+    return (m + (-m) % rg, k + (-k) % 128, n + (-n) % 128)
 
 
 def cache_key(m: int, k: int, n: int, *, dtype: str = "float32",
               emax_a: int = 7, emax_w: int = 7, quantize: bool = True,
-              backend: Optional[str] = None) -> str:
-    mp, kp, np_ = _pad_dims(m, k, n)
+              backend: Optional[str] = None,
+              op: str = "potq_matmul") -> str:
+    mp, kp, np_ = _pad_dims(m, k, n, op)
     backend = backend or jax.default_backend()
+    if op.startswith("grad_"):
+        # the backward kernels quantize ONLY the gradient (keyed through
+        # the emax_a slot as emax_g); the other operand is a pre-quantized
+        # residual — normalize the irrelevant knobs out of the key.  The
+        # PRC-on/off structural difference is the grad_da vs grad_da_raw
+        # tag itself.
+        emax_w = 0
+        quantize = True
     if not quantize:
         # the raw (pot_value_matmul) path never runs the in-kernel
         # quantizer, so emax is irrelevant — normalize it out of the key
         # so every caller hits the same entry regardless of policy bits
         emax_a = emax_w = 0
     q = "q" if quantize else "raw"
-    return f"potq_matmul|{mp}x{kp}x{np_}|{dtype}|e{emax_a},{emax_w}|{q}|{backend}"
+    return f"{op}|{mp}x{kp}x{np_}|{dtype}|e{emax_a},{emax_w}|{q}|{backend}"
 
 
-def clamp_blocks(m: int, k: int, n: int, bm: int, bn: int, bk: int):
-    """Clamp block sizes to (padded) problem dims, keep >=8x128 lane tiles.
+def clamp_blocks(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                 op: str = "potq_matmul"):
+    """Clamp block sizes to (padded) problem dims, keep legal lane tiles.
 
-    bk is additionally floored to a CANONICAL_BK multiple — the kernel's
+    bk is additionally floored to a CANONICAL_BK multiple — the kernels'
     fixed-order reduction asserts it, so this is what actually keeps a
-    hand-edited cache entry from crashing at trace time."""
-    mp, kp, np_ = _pad_dims(m, k, n)
-    bm = min(bm, max(8, mp))
+    hand-edited cache entry from crashing at trace time.  bn (and, for
+    grad_dw, bm) are floored to 128-lane multiples for the same reason:
+    grad_da's canonical dgamma row reduction chunks bn by 128."""
+    mp, kp, np_ = _pad_dims(m, k, n, op)
+    rg = _row_granularity(op)
+    bm = min(bm, max(rg, mp))
+    bm = max(rg, bm - bm % rg)
     bn = min(bn, max(128, np_))
+    bn = max(128, bn - bn % 128)
     bk = min(bk, max(128, kp))
     bk = max(_k.CANONICAL_BK, bk - bk % _k.CANONICAL_BK)
     return bm, bn, bk
 
 
-def heuristic_blocks(m: int, k: int, n: int) -> BlockChoice:
+def heuristic_blocks(m: int, k: int, n: int,
+                     op: str = "potq_matmul") -> BlockChoice:
     """The pre-autotune structural default: 256^3 clamped to the problem."""
     bm, bn, bk = clamp_blocks(
-        m, k, n, _k.DEFAULT_BM, _k.DEFAULT_BN, _k.DEFAULT_BK
+        m, k, n, _k.DEFAULT_BM, _k.DEFAULT_BN, _k.DEFAULT_BK, op
     )
     return BlockChoice(bm, bn, bk, "heuristic")
 
 
-def candidate_blocks(m: int, k: int, n: int) -> List[Tuple[int, int, int]]:
+def candidate_blocks(m: int, k: int, n: int,
+                     op: str = "potq_matmul") -> List[Tuple[int, int, int]]:
     """MXU-aligned candidate tilings for one problem, VMEM-filtered.
 
     Always contains :func:`heuristic_blocks` (the old fixed default), so a
     measured argmin can never regress against it.
     """
-    mp, kp, np_ = _pad_dims(m, k, n)
-    bms = sorted({min(v, max(8, mp)) for v in (64, 128, 256, 512)})
+    mp, kp, np_ = _pad_dims(m, k, n, op)
+    rg = _row_granularity(op)
+    bm_vals = (128, 256, 512) if rg == 128 else (64, 128, 256, 512)
+    bms = sorted({min(v, max(rg, mp)) for v in bm_vals})
     bns = sorted({min(v, max(128, np_)) for v in (128, 256, 512)})
     bks = sorted({min(v, max(128, kp)) for v in (128, 256, 512)})
     out = []
     for bm in bms:
         for bn in bns:
             for bk in bks:
-                if vmem_block_bytes(bm, bn, bk) <= VMEM_BUDGET_BYTES:
+                if vmem_block_bytes(bm, bn, bk, op) <= VMEM_BUDGET_BYTES:
                     out.append((bm, bn, bk))
-    h = heuristic_blocks(m, k, n).blocks
+    h = heuristic_blocks(m, k, n, op).blocks
     if h not in out:
         out.append(h)
     return sorted(set(out))
@@ -160,6 +208,11 @@ class TuningCache:
         self.path = path or default_cache_path()
         self._lock = threading.Lock()
         self._entries: Optional[Dict[str, dict]] = None
+        # keys stored with persist=False (benchmark timings): visible to
+        # lookups in this process, NEVER flushed to disk by later
+        # persisting puts — the on-disk tuned table only ever receives
+        # entries explicitly persisted.
+        self._transient: set = set()
 
     def _read_disk(self) -> Dict[str, dict]:
         try:
@@ -190,17 +243,28 @@ class TuningCache:
             entries = self._load_locked()
             entries[key] = entry
             if not persist:
+                self._transient.add(key)
                 return
+            self._transient.discard(key)
             # merge with what is on disk NOW: another tuner process may
             # have persisted entries since we loaded — a blind rewrite of
-            # our stale view would silently drop its measured results
-            merged = self._read_disk()
-            merged.update(entries)
-            entries = self._entries = merged
+            # our stale view would silently drop its measured results.
+            # Transient (persist=False) entries stay out of the payload:
+            # a later persisting put must not flush benchmark timings
+            # over the operator's carefully measured table.
+            disk_entries = self._read_disk()
+            disk_entries.update({k: v for k, v in entries.items()
+                                 if k not in self._transient})
+            # in-memory view: the persisted table with this process's
+            # transient (benchmark) entries layered back on top
+            self._entries = dict(disk_entries)
+            self._entries.update(
+                {k: entries[k] for k in self._transient if k in entries}
+            )
             payload = {
                 "format": CACHE_FORMAT,
                 "scheme": _k.ACC_SCHEME,
-                "entries": entries,
+                "entries": disk_entries,
             }
             d = os.path.dirname(self.path) or "."
             tmp = None
@@ -258,10 +322,10 @@ def reset_cache(path: Optional[str] = None) -> TuningCache:
 
 def lookup(m: int, k: int, n: int, *, dtype: str = "float32",
            emax_a: int = 7, emax_w: int = 7,
-           quantize: bool = True) -> BlockChoice:
+           quantize: bool = True, op: str = "potq_matmul") -> BlockChoice:
     """Tuned blocks for a problem: cache hit -> measured, miss -> heuristic."""
     key = cache_key(m, k, n, dtype=dtype, emax_a=emax_a, emax_w=emax_w,
-                    quantize=quantize)
+                    quantize=quantize, op=op)
     e = active_cache().get(key)
     if e is not None:
         # defensive: a hand-edited/truncated entry must degrade to the
@@ -269,28 +333,30 @@ def lookup(m: int, k: int, n: int, *, dtype: str = "float32",
         # additionally floors bk to a legal CANONICAL_BK multiple
         try:
             bm, bn, bk = clamp_blocks(
-                m, k, n, int(e["bm"]), int(e["bn"]), int(e["bk"])
+                m, k, n, int(e["bm"]), int(e["bn"]), int(e["bk"]), op
             )
         except (KeyError, TypeError, ValueError):
-            return heuristic_blocks(m, k, n)
+            return heuristic_blocks(m, k, n, op)
         return BlockChoice(bm, bn, bk, e.get("source", "measured"),
                            e.get("us"))
-    return heuristic_blocks(m, k, n)
+    return heuristic_blocks(m, k, n, op)
 
 
 def resolve(m: int, k: int, n: int, bm: Optional[int], bn: Optional[int],
             bk: Optional[int], *, dtype: str = "float32", emax_a: int = 7,
-            emax_w: int = 7, quantize: bool = True) -> Tuple[int, int, int]:
+            emax_w: int = 7, quantize: bool = True,
+            op: str = "potq_matmul") -> Tuple[int, int, int]:
     """ops.py entry point: explicit blocks clamp, ``None`` blocks autotune."""
     if bm is not None and bn is not None and bk is not None:
-        return clamp_blocks(m, k, n, bm, bn, bk)
+        return clamp_blocks(m, k, n, bm, bn, bk, op)
     choice = lookup(m, k, n, dtype=dtype, emax_a=emax_a, emax_w=emax_w,
-                    quantize=quantize)
+                    quantize=quantize, op=op)
     return clamp_blocks(
         m, k, n,
         bm if bm is not None else choice.bm,
         bn if bn is not None else choice.bn,
         bk if bk is not None else choice.bk,
+        op,
     )
 
 
@@ -308,43 +374,77 @@ def _time_call(f, iters: int) -> float:
 def tune(m: int, k: int, n: int, *, bits_a: int = 5, bits_w: int = 5,
          quantize: bool = True, iters: int = 3,
          interpret: Optional[bool] = None, persist: bool = True,
-         seed: int = 0) -> BlockChoice:
+         seed: int = 0, op: str = "potq_matmul") -> BlockChoice:
     """Measure every candidate tiling for one problem and cache the argmin.
 
-    Because the kernel is tiling-invariant (bit-identical output for every
-    candidate), selection is on time alone — no accuracy re-validation is
-    needed.  The heuristic 256^3 default is always a candidate, so the
-    returned choice is never slower than the old fixed default as
-    measured.
+    ``op`` selects the kernel: the fused forward (``potq_matmul``, with
+    ``quantize`` toggling the raw pot_value path) or one of the fused
+    backward MACs (``grad_da`` / ``grad_dw``).  (m, k, n) is always
+    (rows, contraction, cols) of that op's matmul.  Because every kernel
+    is tiling-invariant (bit-identical output for every candidate),
+    selection is on time alone — no accuracy re-validation is needed.
+    The heuristic 256^3 default is always a candidate, so the returned
+    choice is never slower than the old fixed default as measured.
     """
     from repro.kernels import ops  # lazy: ops imports this module
 
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 2)
-    a = jax.random.normal(k1, (m, k), jnp.float32)
-    w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}, expected one of {OPS}")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    if op in ("grad_da", "grad_da_raw"):
+        # rows=M tokens, contraction=N outs, cols=K ins
+        prc = op == "grad_da"
+        g = jax.random.normal(k1, (m, k), jnp.float32) * 0.01
+        wq = potq.pot_quantize(
+            jax.random.normal(k2, (n, k), jnp.float32) * 0.05, bits_w)
+        a = jax.random.normal(k3, (m, n), jnp.float32) if prc else None
+        ct = jnp.max(jnp.abs(a)) * 0.95 if prc else None
 
-    def run(blocks):
-        bm, bn, bk = blocks
-        if quantize:
-            return lambda: ops.potq_matmul(
-                a, w, bits_a=bits_a, bits_w=bits_w,
+        def run(blocks):
+            bm, bn, bk = blocks
+            return lambda: ops.grad_da_matmul(
+                g, wq, a=a, clip_t=ct, bits_g=bits_a,
+                bm=bm, bn=bn, bk=bk, interpret=interpret,
+            )[0]
+    elif op == "grad_dw":
+        # rows=K ins, contraction=M tokens, cols=N outs
+        aq = potq.pot_quantize(
+            jax.random.normal(k1, (k, m), jnp.float32), bits_a)
+        g = jax.random.normal(k2, (k, n), jnp.float32) * 0.01
+
+        def run(blocks):
+            bm, bn, bk = blocks
+            return lambda: ops.grad_dw_matmul(
+                g, aq, bits_g=bits_a,
                 bm=bm, bn=bn, bk=bk, interpret=interpret,
             )
-        return lambda: ops.pot_value_matmul(
-            a, w, bm=bm, bn=bn, bk=bk, interpret=interpret
-        )
+    else:
+        a = jax.random.normal(k1, (m, k), jnp.float32)
+        w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
 
-    default = heuristic_blocks(m, k, n).blocks
+        def run(blocks):
+            bm, bn, bk = blocks
+            if quantize:
+                return lambda: ops.potq_matmul(
+                    a, w, bits_a=bits_a, bits_w=bits_w,
+                    bm=bm, bn=bn, bk=bk, interpret=interpret,
+                )
+            return lambda: ops.pot_value_matmul(
+                a, w, bm=bm, bn=bn, bk=bk, interpret=interpret
+            )
+
+    default = heuristic_blocks(m, k, n, op).blocks
     timings: Dict[Tuple[int, int, int], float] = {}
-    for blocks in candidate_blocks(m, k, n):
+    for blocks in candidate_blocks(m, k, n, op):
         timings[blocks] = _time_call(run(blocks), iters)
     best = min(timings, key=lambda b: (timings[b], b))
     # tie-break toward the known-good default within measurement noise (2%)
     if timings[default] <= timings[best] * 1.02:
         best = default
     key = cache_key(m, k, n, emax_a=potq.pot_emax(bits_a),
-                    emax_w=potq.pot_emax(bits_w), quantize=quantize)
-    # (for quantize=False the emax args are normalized out of the key)
+                    emax_w=potq.pot_emax(bits_w), quantize=quantize, op=op)
+    # (for quantize=False the emax args are normalized out of the key;
+    # grad ops key their G bit-width through the emax_a slot)
     entry = {
         "bm": best[0], "bn": best[1], "bk": best[2],
         "us": round(timings[best], 2),
@@ -390,9 +490,25 @@ def model_matmul_shapes(cfg, *, batch: int, seq: int) -> List[Tuple[int, int, in
     return sorted(shapes)
 
 
+def grad_shapes_for(m: int, k: int, n: int, *, prc: bool = True,
+                    ) -> List[Tuple[str, Tuple[int, int, int]]]:
+    """The two backward matmul problems of a forward (M, K, N) projection.
+
+    grad_da is dA = Gq @ Wq^T — an (M x N x K) matmul (contraction over
+    the forward's output dim); grad_dw is dW = Aq^T @ Gq — (K x M x N).
+    ``prc`` selects the dA tag: the PRC epilogue changes the kernel's
+    VMEM footprint, so PRC-on and PRC-off tune under different tags.
+    """
+    da_op = "grad_da" if prc else "grad_da_raw"
+    return [(da_op, (m, n, k)), ("grad_dw", (k, m, n))]
+
+
 def prime_for_model(cfg, *, batch: int, seq: int, bits_a: int = 5,
-                    bits_w: int = 5, measure: bool = False, iters: int = 3,
-                    quantize: bool = False,
+                    bits_w: int = 5, bits_g: int = 5,
+                    bits_g_last: Optional[int] = None,
+                    measure: bool = False,
+                    iters: int = 3, quantize: bool = False,
+                    include_grads: bool = False, prc: bool = True,
                     ) -> List[Tuple[Tuple[int, int, int], BlockChoice]]:
     """Consult (or, with ``measure=True``, populate) the tuned table for
     every matmul shape of a model step.  Returns [(shape, choice), ...].
@@ -403,10 +519,24 @@ def prime_for_model(cfg, *, batch: int, seq: int, bits_a: int = 5,
     ``autotune.resolve(..., quantize=False)`` keys must match what is
     primed here.  ``quantize=True`` primes the standalone fused
     ``ops.potq_matmul`` kernel instead (direct callers / benchmarks).
+
+    ``include_grads=True`` additionally primes the fused backward MACs
+    (``grad_da`` / ``grad_dw`` keys, what ``ops.potq_grad_matmuls``
+    resolves during training backward passes) for each forward shape —
+    training runs want this; serving never executes a backward.  The
+    last layer (the LM head) quantizes its gradient at ``bits_g_last``
+    (Appendix D), which keys differently when its emax differs from
+    ``bits_g``'s — pass ``bits_g_last`` so the head's backward keys are
+    primed too instead of staying heuristic-cold forever.  ``prc``
+    mirrors ``policy.prc_enabled``: PRC-off backward dispatches resolve
+    the ``grad_da_raw`` tag instead of ``grad_da``.
     """
     out = []
     emax_a = potq.pot_emax(bits_a)
     emax_w = potq.pot_emax(bits_w)
+    # the LM-head projection is the is_last mf_linear: its backward
+    # resolves bits_g_last-keyed entries
+    head_shape = (batch * seq, cfg.d_model, cfg.vocab_padded)
     # (cache_key normalizes emax away for the quantize=False path)
     for (m, k, n) in model_matmul_shapes(cfg, batch=batch, seq=seq):
         if measure:
@@ -416,4 +546,17 @@ def prime_for_model(cfg, *, batch: int, seq: int, bits_a: int = 5,
             choice = lookup(m, k, n, emax_a=emax_a, emax_w=emax_w,
                             quantize=quantize)
         out.append(((m, k, n), choice))
+        if not include_grads:
+            continue
+        g_bits = {bits_g}
+        if (m, k, n) == head_shape and bits_g_last is not None:
+            g_bits.add(bits_g_last)
+        for op, (gm, gk, gn) in grad_shapes_for(m, k, n, prc=prc):
+            for gb in sorted(g_bits):
+                if measure:
+                    choice = tune(gm, gk, gn, bits_a=gb, iters=iters, op=op)
+                else:
+                    choice = lookup(gm, gk, gn, emax_a=potq.pot_emax(gb),
+                                    op=op)
+                out.append(((gm, gk, gn), choice))
     return out

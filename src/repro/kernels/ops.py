@@ -3,6 +3,12 @@
 * :func:`potq_matmul`     — fused PRC-clip + WBC + ALS-PoTQ + matmul.
 * :func:`pot_value_matmul`— tiled matmul over already-PoT-valued operands
   (what core/mfmac.py dispatches to when policy.use_pallas=True).
+* :func:`potq_grad_matmuls` — fused backward: quantize the incoming
+  gradient once, compute dA = Gq @ Wq^T and dW = Aq^T @ Gq via
+  transposed-operand BlockSpecs, PRC clip-mask + dgamma epilogue fused
+  (what core/mfmac.py's backward dispatches to under use_pallas).
+  :func:`grad_da_matmul` / :func:`grad_dw_matmul` expose the two halves
+  individually (autotuner, benchmarks).
 
 On this CPU container the kernels run in interpret mode (the Pallas body
 executes in Python); on TPU set ``interpret=False`` (default resolves by
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import potq
 from repro.kernels import autotune
 from repro.kernels import potq_encode as _ke
+from repro.kernels import potq_grad as _kg
 from repro.kernels import potq_matmul as _k
 
 
@@ -146,6 +153,150 @@ def pot_value_matmul(
         interpret=interpret,
     )
     return out[:m, :n]
+
+
+def _g_scales(g: jax.Array, bits_g: int, beta_g: Optional[jax.Array]):
+    """(scale, dequant, emax) for the in-kernel gradient quantizer."""
+    if beta_g is None:
+        beta_g = potq.compute_beta(g, bits_g)
+    one = lambda v: jnp.full((1, 1), v, jnp.float32)
+    return one(potq.exp2i(-beta_g)), one(potq.exp2i(beta_g)), potq.pot_emax(bits_g)
+
+
+def grad_da_matmul(
+    g: jax.Array,  # (M, N) raw incoming gradient
+    wq: jax.Array,  # (K, N) quantized weights (forward residual)
+    *,
+    a: Optional[jax.Array] = None,  # (M, K) raw activations (PRC epilogue)
+    clip_t: Optional[jax.Array] = None,  # scalar PRC threshold
+    bits_g: int = 5,
+    beta_g: Optional[jax.Array] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Fused dA = Gq @ Wq^T: G quantized in VMEM, Wq streamed in natural
+    (K, N) layout (transposed-operand index map, no ``.T`` copy).
+
+    With ``a``/``clip_t`` the PRC epilogue runs in-kernel: dA is
+    clip-masked and the dgamma contribution is reduced to per-row partials
+    in canonical order.  Returns ``(da, dgamma_rows)`` where
+    ``dgamma_rows`` is the (M,) canonical row-sum vector (``None`` when
+    the epilogue is off); ``sum(dgamma_rows) * max|a|`` is dgamma.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    prc = a is not None
+    if prc and clip_t is None:
+        raise ValueError("PRC epilogue needs both a and clip_t")
+    g = g.astype(jnp.float32)
+    wq = wq.astype(jnp.float32)
+    m, nn = g.shape
+    k = wq.shape[0]
+    sg, deq, emax_g = _g_scales(g, bits_g, beta_g)
+    # matmul problem: rows=M, contraction=N, cols=K; the PRC epilogue
+    # changes the VMEM footprint, so PRC-off tunes under its own tag
+    bm_, bn_, bk_ = autotune.resolve(
+        m, nn, k, bm, bn, bk, emax_a=emax_g,
+        op="grad_da" if prc else "grad_da_raw",
+    )
+    gp = _pad_to(_pad_to(g, 8, 128), bm_, bk_)
+    wp = _pad_to(_pad_to(wq, 128, 128), bn_, bk_)
+    if prc:
+        a = a.astype(jnp.float32)
+        ap = _pad_to(a, bm_, bn_)
+        assert ap.shape == (gp.shape[0], wp.shape[0])
+        out, rows = _kg.grad_da_padded(
+            gp, wp, ap, sg, deq, jnp.full((1, 1), clip_t, jnp.float32),
+            emax_g=emax_g, prc=True, bm=bm_, bn=bn_, bk=bk_,
+            interpret=interpret,
+        )
+        # every lane of a row carries the same partial; the final
+        # tiling-independent reduction over the fixed-shape (M,) vector
+        # belongs to the caller (potq_grad_matmuls / tests)
+        return out[:m, :k], rows[:m, 0]
+    out = _kg.grad_da_padded(
+        gp, wp, gp, sg, deq, jnp.full((1, 1), jnp.inf, jnp.float32),
+        emax_g=emax_g, prc=False, bm=bm_, bn=bn_, bk=bk_,
+        interpret=interpret,
+    )
+    return out[:m, :k], None
+
+
+def grad_dw_matmul(
+    g: jax.Array,  # (M, N) raw incoming gradient
+    aq: jax.Array,  # (M, K) quantized activations (forward residual)
+    *,
+    bits_g: int = 5,
+    beta_g: Optional[jax.Array] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused dW = Aq^T @ Gq: G quantized in VMEM, Aq streamed in natural
+    (M, K) layout (transposed-operand index map, no ``.T`` copy)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    g = g.astype(jnp.float32)
+    aq = aq.astype(jnp.float32)
+    m, nn = g.shape
+    k = aq.shape[1]
+    sg, deq, emax_g = _g_scales(g, bits_g, beta_g)
+    # matmul problem: rows=K, contraction=M, cols=N
+    bm_, bn_, bk_ = autotune.resolve(
+        k, m, nn, bm, bn, bk, emax_a=emax_g, op="grad_dw"
+    )
+    ap = _pad_to(_pad_to(aq, 128, 128), bk_, bm_)
+    gp = _pad_to(_pad_to(g, 128, 128), bk_, bn_)
+    out = _kg.grad_dw_padded(
+        ap, gp, sg, deq, emax_g=emax_g, bm=bm_, bn=bn_, bk=bk_,
+        interpret=interpret,
+    )
+    return out[:k, :nn]
+
+
+def potq_grad_matmuls(
+    g: jax.Array,  # (M, N) raw incoming gradient
+    aq: jax.Array,  # (M, K) quantized activations (forward residual)
+    wq: jax.Array,  # (K, N) quantized weights (forward residual)
+    *,
+    a: Optional[jax.Array] = None,  # (M, K) raw activations (PRC epilogue)
+    clip_t: Optional[jax.Array] = None,  # scalar PRC threshold
+    amax: Optional[jax.Array] = None,  # scalar max|a| (dgamma scale)
+    bits_g: int = 5,
+    interpret: Optional[bool] = None,
+):
+    """Fused backward MACs (Algorithm 1, lines 13-15): the incoming
+    gradient is quantized ONCE — a single beta_g derivation, one
+    deterministic in-VMEM quantization shared by both products, no FP32
+    quantized intermediate in HBM — then
+
+        dA = Gq @ Wq^T   (PRC clip mask + dgamma epilogue fused)
+        dW = Aq^T @ Gq
+
+    Returns ``(da, dw, dgamma)``; ``dgamma`` is ``None`` when ``a`` /
+    ``clip_t`` are not given (PRC disabled).  Bit-identical across all
+    block tilings and bit-equal to ``kernels/ref.py::potq_grad_ref``
+    (tests/conformance/test_grad_paths.py).
+    """
+    g = g.astype(jnp.float32)
+    beta_g = potq.compute_beta(g, bits_g)  # quantized once: one shared beta
+    da, rows = grad_da_matmul(
+        g, wq, a=a, clip_t=clip_t, bits_g=bits_g, beta_g=beta_g,
+        interpret=interpret,
+    )
+    dw = grad_dw_matmul(
+        g, aq, bits_g=bits_g, beta_g=beta_g, interpret=interpret
+    )
+    if rows is None:
+        return da, dw, None
+    if amax is None:
+        amax = jnp.max(jnp.abs(a.astype(jnp.float32)))
+    # fixed-shape (M,) reduction: independent of both kernels' tilings
+    dgamma = jnp.sum(rows) * amax
+    return da, dw, dgamma
 
 
 def potq_encode(

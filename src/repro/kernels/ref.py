@@ -65,6 +65,74 @@ def pot_value_matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     return out
 
 
+def grad_rowsum_ref(x: jax.Array) -> jax.Array:
+    """Canonical fixed-order row reduction: sum over the last axis in
+    ``CANONICAL_BK``-wide chunks, left-folded in ascending chunk order.
+
+    This is the numeric spec for the dgamma epilogue of the fused backward
+    kernel: each 128-wide chunk is reduced with one fixed-shape
+    ``sum(axis=1)`` (identical bits for any row-tile height) and the chunk
+    partials fold left in global chunk order — so the (M,) result is
+    independent of the kernel's (bm, bn, bk) tiling.  Zero padding appends
+    exact-zero partials.
+    """
+    k = x.shape[1]
+    pad = (-k) % CANONICAL_BK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = jnp.zeros((x.shape[0],), jnp.float32)
+    for c in range(0, k + pad, CANONICAL_BK):
+        out = out + jnp.sum(x[:, c:c + CANONICAL_BK], axis=1)
+    return out
+
+
+def potq_grad_ref(
+    g: jax.Array,  # (M, N) raw incoming gradient
+    aq: jax.Array,  # (M, K) quantized activations (forward residual)
+    wq: jax.Array,  # (K, N) quantized weights (forward residual)
+    *,
+    a: Optional[jax.Array] = None,  # (M, K) raw activations (PRC epilogue)
+    clip_t: Optional[jax.Array] = None,  # scalar PRC threshold
+    amax: Optional[jax.Array] = None,  # scalar max|a| (dgamma scale)
+    bits_g: int = 5,
+):
+    """Oracle for the fused backward kernels (Algorithm 1, lines 13-15).
+
+    G is ALS-PoTQ quantized ONCE (one beta, real-domain values — exact PoT
+    scaling makes this bit-identical to the kernel's scaled-domain
+    quantize + 2^beta_g dequant epilogue) and reused for both MACs:
+
+        dA = Gq @ Wq^T, then the PRC clip mask / dgamma reduction
+        dW = Aq^T @ Gq
+
+    Both matmuls reduce in the canonical fixed order over their
+    contraction axis (N for dA, M for dW).  Returns ``(da, dw, dgamma)``;
+    ``dgamma`` is ``None`` when ``a``/``clip_t`` are not given (PRC off).
+    """
+    g = g.astype(jnp.float32)
+    aq = aq.astype(jnp.float32)
+    wq = wq.astype(jnp.float32)
+    beta_g = potq.compute_beta(g, bits_g)
+    gq = quantize_tile_ref(
+        g * exp2i(-beta_g), potq.pot_emax(bits_g)
+    ) * exp2i(beta_g)
+    # transposes are materialized here for clarity — the oracle is the
+    # numeric spec, not the datapath; the kernel reads natural layouts
+    da_raw = pot_value_matmul_ref(gq, wq.T)
+    dw = pot_value_matmul_ref(aq.T, gq)
+    if a is None or clip_t is None:
+        return da_raw, dw, None
+    a = a.astype(jnp.float32)
+    clipped = jnp.abs(a) > clip_t
+    contrib = jnp.where(clipped, da_raw * jnp.sign(a), 0.0)
+    rows = grad_rowsum_ref(contrib)
+    if amax is None:
+        amax = jnp.max(jnp.abs(a))
+    dgamma = jnp.sum(rows) * amax
+    da = jnp.where(clipped, 0.0, da_raw)
+    return da, dw, dgamma
+
+
 def potq_matmul_ref(
     a: jax.Array,
     w: jax.Array,

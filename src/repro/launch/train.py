@@ -89,7 +89,9 @@ def main(argv=None):
     else:
         opt = adamw(warmup_cosine_schedule(args.lr, 20, args.steps))
     # Consult the kernel autotuner for this run's matmul shapes (tuned
-    # cache -> heuristic; `measure` benchmarks and persists).  Tiling is
+    # cache -> heuristic; `measure` benchmarks and persists).  Training
+    # also primes the fused backward MACs (grad_da / grad_dw keys —
+    # ops.potq_grad_matmuls resolves them in every backward).  Tiling is
     # numerics-free (fixed-order reduction), so this only affects speed.
     if args.autotune != "off" and policy.use_pallas:
         from repro.kernels import autotune as _autotune
@@ -97,6 +99,8 @@ def main(argv=None):
         primed = _autotune.prime_for_model(
             cfg, batch=args.batch // max(args.microbatches, 1), seq=args.seq,
             bits_a=policy.bits_a, bits_w=policy.bits_w,
+            bits_g=policy.bits_g, bits_g_last=policy.bits_g_last,
+            include_grads=True, prc=policy.prc_enabled,
             measure=args.autotune == "measure",
         )
         for (mkn, choice) in primed:

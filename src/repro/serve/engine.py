@@ -49,6 +49,10 @@ def prime_kernel_autotune(cfg: ModelConfig, policy: QuantPolicy, *,
     fixed-order reduction is bit-identical across block shapes — so
     retuning never changes served outputs.  Returns [] when the jnp path
     is in use.
+
+    Serving primes forward keys only (``include_grads=False``): a serve
+    step never executes the fused backward MACs; training runs prime
+    those via ``launch/train.py --autotune``.
     """
     if not policy.use_pallas:
         return []

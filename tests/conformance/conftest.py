@@ -34,3 +34,15 @@ def fixed_inputs(request):
     a = jax.random.normal(k1, (m, k), jnp.float32) * 1.7
     w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
     return a, w
+
+
+@pytest.fixture(params=SHAPES, ids=lambda s: "x".join(map(str, s)))
+def grad_inputs(request):
+    """(a, w, g) for the backward conformance suite: the forward operands
+    plus an incoming gradient with a gradient-like dynamic range."""
+    m, k, n = request.param
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m * 31 + k + n), 3)
+    a = jax.random.normal(k1, (m, k), jnp.float32) * 1.7
+    w = jax.random.normal(k2, (k, n), jnp.float32) * 0.05
+    g = jax.random.normal(k3, (m, n), jnp.float32) * 1e-3
+    return a, w, g

@@ -1,0 +1,189 @@
+"""Backward-pass conformance: one input set, every backward implementation.
+
+Paths (docs/DESIGN_kernels.md conformance matrix, backward rows):
+
+  oracle   kernels/ref.py  potq_grad_ref          (canonical-order spec)
+  kernel   kernels/ops.py  potq_grad_matmuls      bit-exact, >=4 tilings
+  mfmac-p  core/mfmac.py   mf_linear vjp, pallas  bit-exact vs oracle
+  mfmac-j  core/mfmac.py   mf_linear vjp, jnp     bounded (full-axis dots
+                                                  reorder the FP32 sums)
+
+dA, dW AND dgamma must be bit-identical across kernel tilings: the two
+matmuls follow the canonical fixed-order contraction (over N for dA, M
+for dW), and the dgamma epilogue reduces to per-row partials in canonical
+128-wide K chunks before a tiling-independent fixed-shape (M,) sum.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mfmac, potq
+from repro.core.policy import PAPER_FAITHFUL
+from repro.kernels import ops, ref
+
+from conformance.conftest import TILINGS
+
+GAMMA = 0.95
+
+
+def _residuals(a, w):
+    """The quantized forward residuals mf_linear would stash (Aq, Wq) plus
+    the PRC scalars the backward consumes."""
+    amax = jnp.max(jnp.abs(a))
+    t = amax * GAMMA
+    aq = potq.pot_quantize(jnp.clip(a, -t, t), 5).astype(jnp.bfloat16)
+    wq = potq.pot_quantize(w - jnp.mean(w), 5).astype(jnp.bfloat16)
+    return aq, wq, amax, t
+
+
+def _oracle(a, w, g):
+    aq, wq, amax, t = _residuals(a, w)
+    return ref.potq_grad_ref(g, aq, wq, a=a, clip_t=t, amax=amax)
+
+
+def test_fused_backward_bit_exact_across_tilings_and_vs_oracle(grad_inputs):
+    """Every (bm, bn, bk) tiling of BOTH backward kernels produces the
+    same bits for dA, dW and dgamma, equal to the backward oracle."""
+    a, w, g = grad_inputs
+    aq, wq, amax, t = _residuals(a, w)
+    da_o, dw_o, dg_o = map(np.asarray, _oracle(a, w, g))
+    assert len(TILINGS) >= 4
+    for bm, bn, bk in TILINGS:
+        da, rows = ops.grad_da_matmul(
+            g, wq, a=a, clip_t=t, bm=bm, bn=bn, bk=bk, interpret=True
+        )
+        # grad_dw's output rows are the lane dim of Aq: bm is 128-aligned
+        dw = ops.grad_dw_matmul(
+            g, aq, bm=max(128, bm), bn=bn, bk=bk, interpret=True
+        )
+        dg = jnp.sum(rows) * amax
+        np.testing.assert_array_equal(
+            np.asarray(da), da_o, err_msg=f"dA tiling {(bm, bn, bk)}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dw), dw_o, err_msg=f"dW tiling {(bm, bn, bk)}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dg), dg_o, err_msg=f"dgamma tiling {(bm, bn, bk)}"
+        )
+
+
+def test_potq_grad_matmuls_entry_point_bit_exact(grad_inputs):
+    """The combined entry point (one beta_g shared by both MACs) matches
+    the oracle bit-for-bit, with and without the PRC epilogue."""
+    a, w, g = grad_inputs
+    aq, wq, amax, t = _residuals(a, w)
+    da_o, dw_o, dg_o = _oracle(a, w, g)
+    da, dw, dg = ops.potq_grad_matmuls(
+        g, aq, wq, a=a, clip_t=t, amax=amax, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(da_o))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_o))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dg_o))
+    # PRC off: raw (unmasked) dA, no dgamma
+    da_p, dw_p, none = ops.potq_grad_matmuls(g, aq, wq, interpret=True)
+    assert none is None
+    da_po, dw_po, _ = ref.potq_grad_ref(g, aq, wq)
+    np.testing.assert_array_equal(np.asarray(da_p), np.asarray(da_po))
+    np.testing.assert_array_equal(np.asarray(dw_p), np.asarray(dw_po))
+
+
+def test_mfmac_pallas_backward_bit_exact_vs_oracle(grad_inputs):
+    """jax.vjp through mf_linear(use_pallas=True) routes the backward
+    through the fused kernels end-to-end: dA, dW, dgamma all bit-equal to
+    the oracle."""
+    a, w, g = grad_inputs
+    policy = dataclasses.replace(PAPER_FAITHFUL, use_pallas=True)
+    _, vjp = jax.vjp(
+        lambda aa, ww, gg: mfmac.mf_linear(aa, ww, gg, policy=policy),
+        a, w, jnp.float32(GAMMA),
+    )
+    da, dw, dg = vjp(g)
+    da_o, dw_o, dg_o = _oracle(a, w, g)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(da_o))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_o))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dg_o))
+
+
+def test_mfmac_jnp_backward_bounded_vs_oracle(grad_inputs):
+    """The composed jnp backward quantizes G standalone and uses full-axis
+    dots whose FP32 summation order is backend-chosen.  Documented bounds
+    (docs/DESIGN_kernels.md): one ulp of the accumulated magnitude per
+    canonical chunk boundary for the matmuls; for the scalar dgamma, the
+    generic reordered-sum bound over all T summed terms."""
+    a, w, g = grad_inputs
+    _, vjp = jax.vjp(
+        lambda aa, ww, gg: mfmac.mf_linear(aa, ww, gg, policy=PAPER_FAITHFUL),
+        a, w, jnp.float32(GAMMA),
+    )
+    da, dw, dg = vjp(g)
+    aq, wq, amax, t = _residuals(a, w)
+    da_o, dw_o, dg_o = _oracle(a, w, g)
+    eps = np.finfo(np.float32).eps
+    gq = potq.pot_quantize(g, 5)
+    m, n = g.shape
+    k = w.shape[0]
+    # dA reduces over N, dW over M — magnitude-based bounds per chunk
+    abs_da = np.asarray(ref.pot_value_matmul_ref(jnp.abs(gq), jnp.abs(wq).T))
+    abs_dw = np.asarray(ref.pot_value_matmul_ref(jnp.abs(aq).T, jnp.abs(gq)))
+    nchunks_n = -(-n // ref.CANONICAL_BK)
+    nchunks_m = -(-m // ref.CANONICAL_BK)
+    assert np.all(np.abs(np.asarray(da) - np.asarray(da_o))
+                  <= nchunks_n * eps * abs_da)
+    assert np.all(np.abs(np.asarray(dw) - np.asarray(dw_o))
+                  <= nchunks_m * eps * abs_dw)
+    # dgamma: any two summation orders of T terms differ by <= T * eps *
+    # sum|terms| (classic reordering bound; T = M*K elements)
+    clipped = np.abs(np.asarray(a)) > np.asarray(t)
+    contrib_abs = np.where(clipped, abs_da, 0.0)
+    dg_bound = m * k * eps * contrib_abs.sum() * float(amax)
+    assert abs(float(dg) - float(dg_o)) <= dg_bound
+
+
+def test_gradient_bits_honored(grad_inputs):
+    """bits_g / bits_g_last reach the in-kernel quantizer: 4/5/6-bit G
+    produce different (and oracle-matching) results."""
+    a, w, g = grad_inputs
+    aq, wq, amax, t = _residuals(a, w)
+    outs = []
+    for bits in (4, 5, 6):
+        da, dw, dg = ops.potq_grad_matmuls(
+            g, aq, wq, a=a, clip_t=t, amax=amax, bits_g=bits, interpret=True
+        )
+        da_o, dw_o, dg_o = ref.potq_grad_ref(
+            g, aq, wq, a=a, clip_t=t, amax=amax, bits_g=bits
+        )
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(da_o))
+        np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_o))
+        np.testing.assert_array_equal(np.asarray(dg), np.asarray(dg_o))
+        outs.append(np.asarray(dw))
+    assert not np.array_equal(outs[0], outs[2])  # 4-bit != 6-bit grid
+
+
+def test_tuned_grad_blocks_change_nothing(grad_inputs, tmp_path):
+    """Planting arbitrary legal tuned entries under the grad_da / grad_dw
+    cache keys cannot change the fused backward's bits — retuning the
+    backward never invalidates golden gradients."""
+    from repro.kernels import autotune
+
+    a, w, g = grad_inputs
+    aq, wq, amax, t = _residuals(a, w)
+    base = ops.potq_grad_matmuls(
+        g, aq, wq, a=a, clip_t=t, amax=amax, interpret=True
+    )
+    m, n = g.shape
+    k = w.shape[0]
+    cache = autotune.reset_cache(str(tmp_path / "t.json"))
+    cache.put(autotune.cache_key(m, n, k, op="grad_da"),
+              {"bm": 8, "bn": 128, "bk": 128, "source": "measured"})
+    cache.put(autotune.cache_key(k, m, n, op="grad_dw"),
+              {"bm": 128, "bn": 128, "bk": 128, "source": "measured"})
+    assert autotune.lookup(m, n, k, op="grad_da").source == "measured"
+    assert autotune.lookup(k, m, n, op="grad_dw").source == "measured"
+    tuned = ops.potq_grad_matmuls(
+        g, aq, wq, a=a, clip_t=t, amax=amax, interpret=True
+    )
+    for got, want in zip(tuned, base):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

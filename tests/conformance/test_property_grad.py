@@ -1,0 +1,150 @@
+"""Hypothesis property suite for gradient quantization (_quantize_g).
+
+Covers the backward half of the quantizer contract: bits_g vs bits_g_last
+selection, subnormal / +-emax / zero gradient elements, idempotence (the
+PoT grid is closed under re-quantization — the formal "quantized once"
+statement), and an operational exactly-once check: one backward pass
+invokes the gradient quantizer exactly once on the jnp path, and exactly
+one fused-kernel dispatch (which derives exactly one beta_g) on the
+Pallas path.  Degrades to skips when the optional ``hypothesis`` dev dep
+is missing (it is installed in CI).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# optional dev dep (requirements-dev.txt): degrade to skips, not a
+# collection error, when hypothesis isn't installed
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import mfmac, potq
+from repro.core.policy import ABLATION_NO_PRC, PAPER_FAITHFUL
+
+# Full-range f32 elements, subnormals included.  A fixed normal-range
+# anchor element is appended by the tests so the layer-wise beta stays in
+# the exact exp2i range (the guarantee is element-wise given a sane
+# layer scale — all-subnormal layers don't occur with layer-wise betas;
+# see docs/DESIGN_kernels.md caveats).
+FULL_F32 = hnp.arrays(
+    np.float32,
+    hnp.array_shapes(min_dims=1, max_dims=2, min_side=1, max_side=64),
+    elements=st.floats(
+        width=32, allow_nan=False, allow_infinity=False,
+        allow_subnormal=True,
+    ),
+)
+
+BITS = st.sampled_from([4, 5, 6])
+
+
+def _with_anchor(f):
+    g = np.zeros(f.size + 1, np.float32)
+    g[: f.size] = np.ravel(f)
+    g[-1] = 0.5
+    return jnp.asarray(g)
+
+
+@hypothesis.given(FULL_F32, BITS, BITS, st.booleans())
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_quantize_g_selects_bits_and_matches_potq(f, bits_g, bits_g_last,
+                                                  is_last):
+    """_quantize_g == pot_quantize at the policy-selected bit-width
+    (bits_g_last iff is_last), bit for bit, over the full f32 domain
+    including subnormal, +-saturating and zero elements."""
+    policy = dataclasses.replace(
+        PAPER_FAITHFUL, bits_g=bits_g, bits_g_last=bits_g_last
+    )
+    g = _with_anchor(f)
+    got = mfmac._quantize_g(g, policy, is_last)
+    bits = bits_g_last if is_last else bits_g
+    want = potq.pot_quantize(g, bits).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(want, np.float32)
+    )
+
+
+#: idempotence domain: |x| <= 2^100 keeps the saturating grid point
+#: 2^(round(log2 max|g|)) finite — with max|g| within half an octave of
+#: f32-max, pot_quantize's upward saturation overflows to inf (by design:
+#: the layer scale targets training-range tensors) and re-quantizing an
+#: inf is not defined.  Subnormals/zeros stay in the domain.
+BOUNDED_F32 = hnp.arrays(
+    np.float32,
+    hnp.array_shapes(min_dims=1, max_dims=2, min_side=1, max_side=64),
+    elements=st.floats(
+        min_value=-(2.0 ** 100), max_value=2.0 ** 100, width=32,
+        allow_nan=False, allow_subnormal=True,
+    ),
+)
+
+
+@hypothesis.given(BOUNDED_F32, BITS)
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_quantize_g_idempotent(f, bits):
+    """Re-quantizing a quantized gradient is the identity: the PoT grid is
+    closed and the layer-wise beta is reproduced from the quantized max.
+    (Quantizing "exactly once" is therefore also *numerically* exact —
+    a second accidental pass could not silently change bits.)"""
+    policy = dataclasses.replace(PAPER_FAITHFUL, bits_g=bits)
+    g = _with_anchor(f)
+    once = mfmac._quantize_g(g, policy, False)
+    twice = mfmac._quantize_g(once, policy, False)
+    np.testing.assert_array_equal(
+        np.asarray(once, np.float32), np.asarray(twice, np.float32)
+    )
+
+
+def _count_calls(monkeypatch, obj, name):
+    calls = []
+    orig = getattr(obj, name)
+
+    def wrapper(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(obj, name, wrapper)
+    return calls
+
+
+@pytest.mark.parametrize("policy", [PAPER_FAITHFUL, ABLATION_NO_PRC],
+                         ids=["prc", "no_prc"])
+def test_jnp_backward_quantizes_gradient_exactly_once(monkeypatch, policy):
+    """One mf_linear backward = exactly ONE _quantize_g call (Algorithm 1
+    line 13: Gq is computed once and reused for both dA and dW)."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 24)) * 0.05
+    g = jax.random.normal(jax.random.PRNGKey(2), (16, 24))
+    _, vjp = jax.vjp(
+        lambda aa, ww: mfmac.mf_linear(aa, ww, policy=policy), a, w
+    )
+    calls = _count_calls(monkeypatch, mfmac, "_quantize_g")
+    vjp(g)
+    assert len(calls) == 1
+
+
+def test_pallas_backward_quantizes_gradient_exactly_once(monkeypatch):
+    """The fused path makes exactly one potq_grad_matmuls dispatch per
+    backward (single shared beta_g; in-VMEM quantization) and never calls
+    the standalone _quantize_g."""
+    from repro.kernels import ops
+
+    policy = dataclasses.replace(PAPER_FAITHFUL, use_pallas=True)
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 24)) * 0.05
+    g = jax.random.normal(jax.random.PRNGKey(2), (16, 24))
+    _, vjp = jax.vjp(
+        lambda aa, ww: mfmac.mf_linear(aa, ww, policy=policy), a, w
+    )
+    fused_calls = _count_calls(monkeypatch, ops, "potq_grad_matmuls")
+    std_calls = _count_calls(monkeypatch, mfmac, "_quantize_g")
+    betas = _count_calls(monkeypatch, potq, "compute_beta")
+    vjp(g)
+    assert len(fused_calls) == 1
+    assert len(std_calls) == 0
+    # one beta_g derivation shared by both backward MACs
+    assert len(betas) == 1

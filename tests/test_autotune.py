@@ -107,6 +107,33 @@ def test_put_merges_with_concurrent_writers(tmp_path):
     assert final.get(k1) and final.get(k2) and final.get(k3)
 
 
+def test_transient_entries_never_flushed_by_later_persist(tmp_path):
+    """persist=False entries (benchmark timings) serve in-process lookups
+    but must NEVER reach disk — not even as a side effect of a later
+    persisting put: the documented contract is that benchmarks cannot
+    clobber the operator's carefully measured tuned table."""
+    cache, path = _use(tmp_path)
+    k1 = autotune.cache_key(8, 128, 128)
+    careful = {"bm": 8, "bn": 128, "bk": 128, "us": 1.0, "source": "measured"}
+    cache.put(k1, careful)  # carefully measured, on disk
+    # a benchmark overwrites k1 in memory and adds a new transient key
+    cache.put(k1, {"bm": 8, "bn": 128, "bk": 128, "us": 999.0,
+                   "source": "measured"}, persist=False)
+    kb = autotune.cache_key(16, 128, 128)
+    cache.put(kb, {"bm": 16, "bn": 128, "bk": 128, "source": "measured"},
+              persist=False)
+    # an unrelated measured entry persists afterwards
+    k2 = autotune.cache_key(32, 128, 128)
+    cache.put(k2, {"bm": 32, "bn": 128, "bk": 128, "source": "measured"})
+    ondisk = autotune.TuningCache(path)
+    assert ondisk.get(kb) is None            # transient key never flushed
+    assert ondisk.get(k1)["us"] == 1.0       # careful entry not clobbered
+    assert ondisk.get(k2) is not None        # the real put landed
+    # the in-process view still serves the benchmark's entries
+    assert cache.get(kb) is not None
+    assert cache.get(k1)["us"] == 999.0
+
+
 def test_malformed_entry_degrades_to_heuristic(tmp_path):
     """Hand-edited entries with missing/garbage fields must fall back to
     the heuristic, never raise on the matmul hot path."""
@@ -192,6 +219,115 @@ def test_primed_entries_hit_model_dispatch_path(tmp_path):
     primed = dict(autotune.prime_for_model(cfg, batch=8, seq=1))
     assert primed[(m, k, n)].source == "measured"
     assert primed[(m, k, n)].blocks == (8, 128, 128)
+
+
+def test_grad_op_keys_are_distinct_and_normalized():
+    """grad_da / grad_dw key separately from the forward AND from each
+    other; their irrelevant knobs (emax_w, quantize) are normalized out
+    while emax_g (the emax_a slot) still misses."""
+    fwd = autotune.cache_key(64, 256, 128)
+    da = autotune.cache_key(64, 256, 128, op="grad_da")
+    da_raw = autotune.cache_key(64, 256, 128, op="grad_da_raw")
+    dw = autotune.cache_key(256, 64, 128, op="grad_dw")
+    # PRC-on and PRC-off grad_da are different kernels (epilogue VMEM
+    # footprint) and must not share tuned entries
+    assert len({fwd, da, da_raw, dw}) == 4
+    # the backward never quantizes the residual operand: emax_w/quantize
+    # cannot fragment the table
+    assert autotune.cache_key(64, 256, 128, op="grad_da", emax_w=3) == da
+    assert autotune.cache_key(64, 256, 128, op="grad_da", quantize=False) == da
+    # but the gradient bit-width (bits_g -> emax_a slot) does key
+    assert autotune.cache_key(64, 256, 128, op="grad_da", emax_a=15) != da
+
+
+def test_grad_op_clamp_and_candidates_are_legal():
+    """grad_dw's output rows are the lane dim of the Aq operand — bm must
+    be a 128-multiple; all ops keep bk on the canonical grid."""
+    for shape in [(128, 128, 128), (512, 512, 512), (100, 640, 300)]:
+        for op in ("grad_da", "grad_da_raw", "grad_dw"):
+            cands = autotune.candidate_blocks(*shape, op)
+            assert autotune.heuristic_blocks(*shape, op).blocks in cands
+            for (bm, bn, bk) in cands:
+                assert bk % K.CANONICAL_BK == 0
+                assert bn % 128 == 0 and bn >= 128
+                if op == "grad_dw":
+                    assert bm % 128 == 0 and bm >= 128
+                else:
+                    assert bm >= 8
+                assert (autotune.vmem_block_bytes(bm, bn, bk, op)
+                        <= autotune.VMEM_BUDGET_BYTES)
+    # clamp floors illegal explicit blocks instead of crashing the kernel
+    assert autotune.clamp_blocks(512, 512, 512, 200, 200, 200,
+                                 "grad_dw") == (128, 128, 128)
+
+
+def test_tune_measures_grad_ops(tmp_path):
+    cache, _ = _use(tmp_path)
+    for op, shape in [("grad_da", (32, 256, 128)),
+                      ("grad_da_raw", (32, 256, 128)),
+                      ("grad_dw", (128, 32, 128))]:
+        choice = autotune.tune(*shape, iters=1, interpret=True, op=op)
+        entry = cache.get(autotune.cache_key(*shape, op=op))
+        assert entry is not None and entry["source"] == "measured"
+        assert entry["us"] <= entry["default_us"]
+        assert choice.blocks == (entry["bm"], entry["bn"], entry["bk"])
+        assert autotune.resolve(*shape, None, None, None, op=op) == choice.blocks
+
+
+def test_grad_shapes_cover_both_backward_macs():
+    shapes = dict(autotune.grad_shapes_for(64, 256, 128))
+    assert shapes["grad_da"] == (64, 128, 256)   # dA: M x N x K
+    assert shapes["grad_dw"] == (256, 64, 128)   # dW: K x M x N
+    # PRC-off dispatches resolve the epilogue-free tag
+    raw = dict(autotune.grad_shapes_for(64, 256, 128, prc=False))
+    assert raw["grad_da_raw"] == (64, 128, 256) and "grad_da" not in raw
+
+
+def test_prime_for_model_include_grads_hits_backward_keys(tmp_path):
+    """include_grads primes the SAME keys ops.potq_grad_matmuls resolves
+    during a training backward — planted entries must land."""
+    from repro import configs as C
+
+    cache, _ = _use(tmp_path)
+    cfg = C.smoke_config("olmo-1b")
+    (m, k, n) = autotune.model_matmul_shapes(cfg, batch=8, seq=1)[0]
+    cache.put(autotune.cache_key(m, n, k, op="grad_da"),
+              {"bm": 8, "bn": 128, "bk": 128, "source": "measured"})
+    primed = dict(autotune.prime_for_model(cfg, batch=8, seq=1,
+                                           include_grads=True))
+    assert primed[(m, n, k)].source == "measured"
+    assert primed[(m, n, k)].blocks == (8, 128, 128)
+    # grad_dw shape is consulted too (heuristic on the cold key)
+    assert (k, m, n) in primed
+    # and the exact resolve grad_da_matmul makes consumes the entry
+    assert autotune.resolve(m, n, k, None, None, None, op="grad_da") == (
+        8, 128, 128
+    )
+
+
+def test_prime_include_grads_covers_last_layer_bits(tmp_path):
+    """The LM head quantizes G at bits_g_last (Appendix D): its backward
+    resolves differently-keyed entries, which include_grads must prime —
+    otherwise the head stays heuristic-cold after a full measure pass."""
+    from repro import configs as C
+    from repro.core import potq
+
+    cache, _ = _use(tmp_path)
+    cfg = C.smoke_config("olmo-1b")
+    head = (8, cfg.d_model, cfg.vocab_padded)
+    (gm, gk, gn) = dict(autotune.grad_shapes_for(*head))["grad_da"]
+    key6 = autotune.cache_key(gm, gk, gn, emax_a=potq.pot_emax(6),
+                              op="grad_da")
+    cache.put(key6, {"bm": 8, "bn": 128, "bk": 128, "source": "measured"})
+    primed = autotune.prime_for_model(
+        cfg, batch=8, seq=1, include_grads=True, bits_g=5, bits_g_last=6
+    )
+    hits = [c for s, c in primed
+            if s == (gm, gk, gn) and c.source == "measured"]
+    assert hits and hits[0].blocks == (8, 128, 128)
+    # and it is the exact key the head's backward resolves (bits_g=6)
+    assert autotune.lookup(gm, gk, gn, emax_a=potq.pot_emax(6),
+                           op="grad_da").source == "measured"
 
 
 def test_tuned_blocks_bit_identical_through_ops(tmp_path):
