@@ -1,55 +1,68 @@
-"""Batched serving with PoT-quantized weights: prefill + greedy decode.
+"""Continuous-batching serving with PoT-quantized weights.
 
   PYTHONPATH=src python examples/serve_llm.py --arch llama3-8b --smoke
 
+Spins up a :class:`repro.serve.PoolEngine` — slot-pooled KV cache + FIFO
+continuous batching — and replays a small Poisson arrival trace through
+it.  Weights are PoT-prequantized at engine construction (the default:
+bit-identical outputs, half the decode weight-read bytes), and batching
+never changes a request's tokens (tests/conformance/test_serve_batching).
+
 Uses the smoke-scale config on CPU; on a TPU pod the same code runs the
-full config under the production mesh (see repro/launch/dryrun.py for the
-compiled serve_step).
+full config under the production mesh — build the plan with
+``planner.plan_for(cfg, mesh, shape=decode_shape, pool_slots=slots)`` and
+pass ``plan=`` to the engine.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as C
-from repro.configs.base import ShapeConfig
 from repro.core.policy import PAPER_FAITHFUL
-from repro.data import pipeline
 from repro.models import registry, spec as pspec
-from repro.serve import generate
+from repro.serve import PoolEngine, poisson_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--arrival-lam", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = C.smoke_config(args.arch) if args.smoke else C.get_config(args.arch)
     params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
-    shape = ShapeConfig("serve", args.prompt_len, args.batch, "decode")
-    batch = pipeline.make_batch(cfg, shape, 0)
-    req = {"tokens": batch["tokens"]}
-    if "frames" in batch:
-        req["frames"] = batch["frames"]
-    if "patch_embeds" in batch:
-        req["patch_embeds"] = batch["patch_embeds"]
 
-    t0 = time.time()
-    toks = generate(
-        cfg, PAPER_FAITHFUL, params, req,
-        max_new_tokens=args.new_tokens,
-        max_len=args.prompt_len + args.new_tokens,
+    reqs = poisson_trace(
+        cfg, n_requests=args.requests, prompt_len=args.prompt_len,
+        lam=args.arrival_lam, new_lo=min(4, args.new_tokens),
+        new_hi=args.new_tokens, seed=args.seed,
     )
+
+    # vlm prompts occupy patch positions ahead of the text tokens
+    prefix = cfg.num_patches if cfg.family == "vlm" and cfg.num_patches else 0
+    engine = PoolEngine(
+        cfg, PAPER_FAITHFUL, params,
+        max_slots=args.slots,
+        max_len=prefix + args.prompt_len + args.new_tokens,
+    )
+    t0 = time.time()
+    out = engine.run(reqs)
     dt = time.time() - t0
-    total = args.batch * args.new_tokens
-    print(f"arch={cfg.name} generated {toks.shape} tokens "
-          f"in {dt:.1f}s ({total/dt:.1f} tok/s batched, CPU smoke scale)")
-    print("sample:", toks[0][:12].tolist())
+    st = engine.last_stats
+    total = sum(len(v) for v in out.values())
+    print(
+        f"arch={cfg.name} served {len(reqs)} requests / {total} tokens "
+        f"in {dt:.1f}s ({total / dt:.1f} tok/s, {st.decode_steps} pooled "
+        f"decode steps, occupancy {st.mean_occupancy:.0%}, CPU smoke scale)"
+    )
+    print("sample:", out[0][:12].tolist())
 
 
 if __name__ == "__main__":

@@ -70,8 +70,19 @@ def _quantize_w(w: jax.Array, policy: QuantPolicy, axes=None) -> jax.Array:
     return potq.pot_quantize(w, policy.bits_w, beta).astype(_BF16)
 
 
+def _sample_axes(policy: QuantPolicy, x: jax.Array, axes):
+    """Scale-group axes for a forward activation: per-sample (all dims but
+    the leading batch dim) under ``policy.per_sample_act_scales``, so slot-
+    pooled decode is batch-invariant (serve/engine.py).  Explicit ``axes``
+    (e.g. per-expert groups) always win."""
+    if axes is None and policy.per_sample_act_scales and x.ndim >= 2:
+        return tuple(range(1, x.ndim))
+    return axes
+
+
 def _quantize_a(a: jax.Array, gamma: jax.Array, policy: QuantPolicy, axes=None):
     """Returns (a_clipped_for_vjp_inputs_unchanged, aq)."""
+    axes = _sample_axes(policy, a, axes)
     a32 = a.astype(jnp.float32)
     if policy.prc_enabled:
         if axes is None:
@@ -288,14 +299,16 @@ def _mf_act_dot(policy: QuantPolicy, dn, x, y):
     return out
 
 
-def _qact(x, bits):
+def _qact(x, bits, axes=None):
     x32 = x.astype(jnp.float32)
-    return potq.pot_quantize(x32, bits, potq.compute_beta(x32, bits)).astype(_BF16)
+    return potq.pot_quantize(
+        x32, bits, potq.compute_beta(x32, bits, axes)
+    ).astype(_BF16)
 
 
 def _mf_act_dot_fwd(policy, dn, x, y):
-    xq = _qact(x, policy.bits_a)
-    yq = _qact(y, policy.bits_a)
+    xq = _qact(x, policy.bits_a, _sample_axes(policy, x, None))
+    yq = _qact(y, policy.bits_a, _sample_axes(policy, y, None))
     out = jax.lax.dot_general(
         xq.astype(_BF16), yq.astype(_BF16), dn, preferred_element_type=jnp.float32
     ).astype(x.dtype)

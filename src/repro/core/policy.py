@@ -52,6 +52,16 @@ class QuantPolicy:
     # (serve/quantized_weights.py) and are stored as exact PoT values in
     # bf16 — skip WBC/re-quantization in mf_linear.
     weights_prequantized: bool = False
+    # Serving: compute forward activation scales (ALS beta + PRC clip
+    # threshold) per leading-dim sample instead of per tensor.  This makes
+    # decode *batch-invariant*: a request's quantization never depends on
+    # which other requests share the batch, which is what lets the
+    # slot-pooled continuous-batching engine (serve/engine.py) guarantee
+    # per-request bit-identity with solo decode.  At batch 1 the per-sample
+    # and per-tensor reductions coincide bit-for-bit, so solo outputs are
+    # unchanged.  Forward-only knob: the backward/gradient paths ignore it
+    # (do not train with it; docs/DESIGN_serving.md).
+    per_sample_act_scales: bool = False
 
     @property
     def prc_enabled(self) -> bool:

@@ -301,14 +301,25 @@ def prefill(cfg, policy, params, tokens, frames, cache):
 
 
 def decode_step(cfg, policy, params, token, cache):
+    """One decode step.  Like ``transformer.decode_step``, accepts both the
+    lockstep cache (scalar ``len``, shared ``pos``) and the slot-pooled
+    cache (``len`` (B,), ``pos`` (B, span)) with per-slot offsets."""
     b = token.shape[0]
     hd = cfg.head_dim
     x = jnp.take(params["embed"], token[:, None], axis=0)
     pos = cache["len"]
+    per_slot = pos.ndim == 1
     span = cache["k"].shape[2]
     slot = pos % span
-    qpos = pos[None].astype(jnp.int32)
-    kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+    rows = jnp.arange(b)
+    if per_slot:
+        qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
+        kpos = cache["pos"].at[rows, slot].set(pos)  # (B, span)
+        pq = qpos
+    else:
+        qpos = pos[None].astype(jnp.int32)
+        kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
     se = cache["ck"].shape[2]
     epos = jax.lax.iota(jnp.int32, se)
 
@@ -318,15 +329,18 @@ def decode_step(cfg, policy, params, token, cache):
         q = _proj_heads(lp, "wq", h, policy, b, 1, cfg.n_heads, hd)
         k = _proj_heads(lp, "wk", h, policy, b, 1, cfg.kv_heads, hd)
         v = _proj_heads(lp, "wv", h, policy, b, 1, cfg.kv_heads, hd)
-        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
-        ck_self = jax.lax.dynamic_update_slice(
-            ck_self, k.astype(ck_self.dtype), (0, slot, 0, 0)
-        )
-        cv_self = jax.lax.dynamic_update_slice(
-            cv_self, v.astype(cv_self.dtype), (0, slot, 0, 0)
-        )
+        if per_slot:
+            ck_self = ck_self.at[rows, slot].set(k[:, 0].astype(ck_self.dtype))
+            cv_self = cv_self.at[rows, slot].set(v[:, 0].astype(cv_self.dtype))
+        else:
+            ck_self = jax.lax.dynamic_update_slice(
+                ck_self, k.astype(ck_self.dtype), (0, slot, 0, 0)
+            )
+            cv_self = jax.lax.dynamic_update_slice(
+                cv_self, v.astype(cv_self.dtype), (0, slot, 0, 0)
+            )
         from repro.models.transformer import _sdpa
 
         att = _sdpa(

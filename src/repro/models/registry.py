@@ -67,6 +67,37 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.family)
 
 
+#: Families whose ``decode_step`` accepts the slot-pooled cache layout
+#: (per-slot ``len``/``pos``; serve/slots.py).  ``hybrid`` still decodes
+#: its attention layers from a single shared position — extend
+#: ``recurrent.decode_step`` the same way transformer/encdec were before
+#: adding it here.
+POOLED_FAMILIES = ("decoder", "vlm", "encdec", "ssm")
+
+
+def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    """Slot-pooled decode cache: ``init_cache`` with the batch axis as the
+    slot axis and the ``pos``/``len`` leaves lifted to per-slot arrays
+    ((max_slots, span) / (max_slots,)).  Built ONCE per engine; requests
+    are prefilled into rows via ``serve.slots.write_slot``."""
+    if cfg.family not in POOLED_FAMILIES:
+        raise NotImplementedError(
+            f"family {cfg.family!r} does not support slot-pooled decode "
+            f"(supported: {POOLED_FAMILIES})"
+        )
+    from repro.serve import slots  # lazy: registry stays importable alone
+
+    cache = slots.lift_cache(init_cache(cfg, max_slots, max_len, dtype),
+                             max_slots)
+    if cfg.moe is not None:
+        # MoE dispatch couples slots through expert capacity: retired
+        # slots are zeroed + masked out of dispatch via this per-slot
+        # flag (transformer.decode_step / _moe_apply)
+        cache["active"] = jnp.zeros((max_slots,), bool)
+    return cache
+
+
 def prefill(cfg, policy, params, batch, cache):
     if cfg.family == "vlm":
         return transformer.prefill(

@@ -125,12 +125,18 @@ def _mlp_apply(cfg: ModelConfig, policy: QuantPolicy, p, x):
     return mfmac.mf_linear(h, p["wo"]["w"], p["wo"]["gamma"], policy=policy)
 
 
-def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x, group_size: int = 512):
+def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x,
+               group_size: int = 512, active=None):
     """GShard-style capacity dispatch; experts run via mf_expert_linear.
 
     x: (B, S, D).  Tokens are flattened and regrouped into groups of
     ``group_size`` so dispatch-einsum FLOPs stay ~O(tokens * group_size)
     instead of O(tokens * seq_len) (DESIGN.md §4).
+
+    ``active`` (pool decode only, (B,) bool with S == 1): retired serving
+    slots are masked out of the dispatch cumsum, so their garbage tokens
+    never claim expert capacity or displace live requests
+    (docs/DESIGN_serving.md §3).
     """
     m = cfg.moe
     b, s, d = x.shape
@@ -155,6 +161,10 @@ def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x, group_size: int = 51
     idx_flat = expert_idx.reshape(g, t * m.top_k)
     gate_flat = gate_vals.reshape(g, t * m.top_k)
     onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.float32)  # (G, T*k, E)
+    if active is not None:
+        assert g == 1 and s == 1 and active.shape == (b,), (g, s, active.shape)
+        act = jnp.repeat(active.astype(jnp.float32), m.top_k)  # (T*k,)
+        onehot = onehot * act[None, :, None]
     pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0  # position in expert
     keep = (pos >= 0) & (pos < cap)
     combine = (
@@ -238,6 +248,12 @@ def _sdpa(cfg, policy, q, k, v, qpos, kpos, window):
     full-cache reshard copies when KV doesn't divide the model axis
     (EXPERIMENTS.md §Perf decode iteration).  The grouped einsum keeps
     K/V as (B, S, KV, hd) and folds the head-repeat factor into Q.
+
+    ``qpos``/``kpos`` are either 1-D (positions shared across the batch —
+    training forward / lockstep decode) or 2-D ``(B, Sq)``/``(B, Skv)``
+    (per-slot offsets: each pool slot decodes at its own position,
+    serve/slots.py).  The shared case is broadcast to the batched mask, so
+    both paths compute identical bits for identical rows.
     """
     b, sq, h, hd = q.shape
     skv = k.shape[1]
@@ -254,11 +270,15 @@ def _sdpa(cfg, policy, q, k, v, qpos, kpos, window):
         ).astype(jnp.float32)
         * scale
     )  # (B, KV, rep, Sq, Skv)
-    mask = kpos[None, :] <= qpos[:, None]
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None, :], (b, sq))
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None, :], (b, skv))
+    mask = kpos[:, None, :] <= qpos[:, :, None]
     if window is not None:
-        mask &= kpos[None, :] > qpos[:, None] - window
-    mask &= kpos[None, :] >= 0  # ring-cache slots not yet written
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
+    mask &= (kpos >= 0)[:, None, :]  # ring-cache slots not yet written
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = mfmac.mf_act_dot(
         probs.astype(q.dtype), vt,
@@ -418,13 +438,41 @@ def prefill(cfg, policy, params, tokens, cache, patch_embeds=None):
 
 
 def decode_step(cfg, policy, params, token, cache):
-    """One decode step.  token: (B,) int32 -> (logits (B, V), new cache)."""
+    """One decode step.  token: (B,) int32 -> (logits (B, V), new cache).
+
+    Two cache layouts are accepted (``registry.init_cache`` vs
+    ``registry.init_pool_cache``):
+
+    * lockstep — ``len`` scalar, ``pos`` (span,): every row decodes at the
+      same position (the pre-pool batched path);
+    * slot-pooled — ``len`` (B,), ``pos`` (B, span): each row is a serving
+      slot with its own cache offset, so requests admitted mid-flight
+      decode next to requests deep into generation (serve/engine.py).
+
+    MoE pool caches additionally carry ``active`` (B,) bool: retired
+    slots' rows are zeroed and masked out of expert-capacity dispatch so
+    their garbage can never displace live requests' tokens.
+    """
     b = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)
+    active = cache.get("active")  # pool caches of MoE configs only
+    if active is not None:
+        x = jnp.where(active[:, None, None], x, jnp.zeros_like(x))
     pos = cache["len"]
+    per_slot = pos.ndim == 1
     span = cache["k"].shape[2]
     slot = pos % span
-    qpos = pos[None].astype(jnp.int32)  # (1,)
+    rows = jnp.arange(b)
+    if per_slot:
+        qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
+        kpos_new = cache["pos"].at[rows, slot].set(pos)  # (B, span)
+        pq = qpos
+    else:
+        qpos = pos[None].astype(jnp.int32)  # (1,)
+        kpos_new = jax.lax.dynamic_update_slice(
+            cache["pos"], pos[None], (slot,)
+        )
+        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
 
     def carry_block(carry, lp_kv):
         lp, ck, cv = lp_kv
@@ -436,15 +484,18 @@ def decode_step(cfg, policy, params, token, cache):
         q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
         k = k.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
         v = v.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
-        pq = jnp.broadcast_to(qpos[None, :], (b, 1))
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice(
-            ck, k.astype(ck.dtype), (0, slot, 0, 0)
-        )
-        cv = jax.lax.dynamic_update_slice(
-            cv, v.astype(cv.dtype), (0, slot, 0, 0)
-        )
+        if per_slot:
+            ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, slot, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, slot, 0, 0)
+            )
         att = _sdpa(
             cfg, policy, q, ck.astype(q.dtype), cv.astype(q.dtype),
             qpos, kpos_new, cfg.window,
@@ -455,14 +506,13 @@ def decode_step(cfg, policy, params, token, cache):
         )
         h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
         if cfg.moe is not None:
-            y = y + _moe_apply(cfg, policy, lp["moe"], h2, group_size=b)
+            y = y + _moe_apply(
+                cfg, policy, lp["moe"], h2, group_size=b, active=active
+            )
         else:
             y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
         return y, (ck, cv)
 
-    kpos_new = jax.lax.dynamic_update_slice(
-        cache["pos"], pos[None], (slot,)
-    )
     x, (nk, nv) = jax.lax.scan(
         carry_block, x, (params["layers"], cache["k"], cache["v"])
     )
@@ -474,4 +524,6 @@ def decode_step(cfg, policy, params, token, cache):
         "pos": kpos_new,
         "len": pos + 1,
     }
+    if active is not None:
+        new_cache["active"] = active
     return logits, new_cache

@@ -135,6 +135,10 @@ class ShardingPlan:
     shape: Optional[Any] = None  # the ShapeConfig this plan was built for
     cache_abstract: Optional[Any] = None  # ShapeDtypeStruct tree behind `cache`
     specs: Optional[Any] = None  # the ParamSpec tree the plan was derived from
+    # Slot-pooled serving (serve/engine.py PoolEngine): when set, `cache`
+    # covers the registry.init_pool_cache tree — batch axis == slot axis,
+    # pos/len lifted to per-slot arrays (replicated; they are tiny int32).
+    pool_slots: Optional[int] = None
 
     # -- shardings ---------------------------------------------------------
     def named(self, spec: P) -> NamedSharding:
@@ -224,11 +228,19 @@ def _moe_decision(spec_axes, pspec: P, mesh) -> Optional[str]:
     return "replicated"
 
 
-def plan_for(cfg, mesh, shape=None, *, validate: bool = True) -> ShardingPlan:
+def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
+             pool_slots: Optional[int] = None) -> ShardingPlan:
     """Build (and by default validate) the plan for ``cfg`` on ``mesh``.
 
     ``shape`` (a ``ShapeConfig``) additionally plans the batch dict, and —
     for decode shapes — the KV/recurrent cache pytree.
+
+    ``pool_slots`` keys the cache plan by slot count for the
+    continuous-batching engine: the planned cache becomes the
+    ``registry.init_pool_cache(cfg, pool_slots, seq_len)`` tree (slot axis
+    in place of the batch axis, per-slot ``pos``/``len`` leaves — these
+    stay replicated per the ``cache_pspecs`` name rules).  Must equal the
+    decode ``shape.global_batch``: the pool IS the decode batch.
     """
     # local imports: keep repro.parallel importable without the model zoo
     from repro.data import pipeline
@@ -260,9 +272,24 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True) -> ShardingPlan:
                 _analyze_leaf("data", name, batch_sds[name].shape, p)
             )
         if getattr(shape, "kind", None) in ("prefill", "decode"):
-            abstract_cache = jax.eval_shape(
-                lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len)
-            )
+            if pool_slots is not None:
+                if pool_slots != shape.global_batch:
+                    raise ShardingPlanError(
+                        f"pool_slots={pool_slots} must equal the decode "
+                        f"shape's global_batch={shape.global_batch}: the "
+                        "pool IS the decode batch"
+                    )
+                abstract_cache = jax.eval_shape(
+                    lambda: registry.init_pool_cache(
+                        cfg, pool_slots, shape.seq_len
+                    )
+                )
+            else:
+                abstract_cache = jax.eval_shape(
+                    lambda: registry.init_cache(
+                        cfg, shape.global_batch, shape.seq_len
+                    )
+                )
             cache = shd.cache_pspecs(mesh, abstract_cache)
             flat_c = jax.tree_util.tree_leaves_with_path(abstract_cache)
             flat_cp = jax.tree_util.tree_leaves(
@@ -276,7 +303,7 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True) -> ShardingPlan:
     plan = ShardingPlan(
         mesh=mesh, params=params, data=data, cache=cache,
         moe=moe, report=tuple(report), shape=shape,
-        cache_abstract=abstract_cache, specs=specs,
+        cache_abstract=abstract_cache, specs=specs, pool_slots=pool_slots,
     )
     if validate:
         plan.validate()

@@ -1,1 +1,10 @@
-from repro.serve.engine import make_prefill_step, make_decode_step, generate  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    PoolEngine,
+    ServeStats,
+    generate,
+    lockstep_generate,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.serve.scheduler import FIFOScheduler, Request  # noqa: F401
+from repro.serve.trace import poisson_trace  # noqa: F401

@@ -1,29 +1,52 @@
-"""Batched serving engine: prefill + decode steps over the registry API.
+"""Serving engines over the registry API: continuous batching + lockstep.
 
-``serve_step`` for the dry-run is the single-token decode step with a full
-KV cache of ``seq_len`` — exactly the assignment's ``decode_*`` semantics.
+The production surface is :class:`PoolEngine` — a slot-pooled KV cache
+(one fixed ``max_slots x max_len`` cache built once via
+``registry.init_pool_cache``) driven by a FIFO continuous-batching
+scheduler (serve/scheduler.py): queued requests are admitted into free
+slots mid-flight with a prefill-into-slot step, a single jitted
+fixed-shape decode step advances the whole pool with per-slot position
+indices, and slots retire on EOS / ``max_new_tokens`` and are refilled
+immediately.  Decode is weight-bound, so dead slots streaming weights for
+nothing is the dominant waste of the old lockstep loop —
+``benchmarks/servebench.py`` measures the recovered tokens/sec.
+
+The headline guarantee (docs/DESIGN_serving.md, enforced by
+tests/conformance/test_serve_batching.py): **batching policy never
+changes a request's tokens**.  For any arrival order and slot count, each
+request's output is bit-identical to running it alone, because every
+per-row computation in the decode step is batch-invariant — matmul rows
+reduce independently (the PR-2 tiling-invariant kernels), softmax/norms
+are row-local, and activation quantization scales are per-sample under
+``policy.per_sample_act_scales`` (forced on by the engine).
+
+``generate`` is a thin wrapper over a pool with one slot per request;
+``lockstep_generate`` keeps the pre-pool semantics (batched prefill, one
+shared position, fixed horizon) as the servebench baseline.
 
 Sharded serving consumes a validated
-:class:`repro.parallel.planner.ShardingPlan` (built with a decode
-``ShapeConfig`` so the plan carries batch/cache specs): pass ``plan=`` to
-the step factories to get jit-compiled steps whose in/out shardings come
-from the plan, or to :func:`generate` to pin in-model activations during
-the decode loop.  With ``plan=None`` (CPU tests, single device)
-everything runs unsharded exactly as before.
+:class:`repro.parallel.planner.ShardingPlan` built with ``pool_slots``
+(so its cache specs cover the lifted per-slot ``pos``/``len`` leaves):
+pass ``plan=`` to the step factories or engines; with ``plan=None`` (CPU
+tests, single device) everything runs unsharded.
 """
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
+import dataclasses
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.policy import QuantPolicy
 from repro.models import registry
 from repro.parallel import actshard
 from repro.parallel.planner import ShardingPlan
+from repro.serve import slots as slots_lib
+from repro.serve.scheduler import FIFOScheduler, Request
 
 
 def _plan_batch(plan: ShardingPlan) -> int:
@@ -64,13 +87,71 @@ def prime_kernel_autotune(cfg: ModelConfig, policy: QuantPolicy, *,
     )
 
 
-def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
-                      plan: Optional[ShardingPlan] = None):
+# One jitted step per (cfg, policy): generate, PoolEngine, lockstep waves
+# and the tests all reuse literally the same compiled closure instead of
+# re-jitting a fresh lambda per call.  Plan-carrying steps are built once
+# per engine by their callers and skip the cache (plans hold pytrees and
+# are not hashable) — and so must any step *traced* under an ambient
+# actshard plan: the model's shard_tokens constraints bake the plan
+# active at trace time into the compiled step, so a shared cache entry
+# would leak one caller's mesh constraints into another's.  jax traces
+# lazily (at first call, not at build), so the shared entries are wrapped
+# in a call-time check that the ambient plan still matches the one at
+# build time — build your step inside the sharding context you will call
+# it in.
+_STEP_CACHE: Dict = {}
+
+
+def _prefill_fn(cfg: ModelConfig, policy: QuantPolicy):
     def prefill_step(params, batch, cache):
         return registry.prefill(cfg, policy, params, batch, cache)
 
+    return prefill_step
+
+
+def _decode_fn(cfg: ModelConfig, policy: QuantPolicy):
+    def decode_step(params, token, cache):
+        logits, cache = registry.decode_step(cfg, policy, params, token, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step
+
+
+def _shared_step(kind: str, cfg, policy, body):
+    """Cache-or-build a plan-less jitted step, enforcing at call time that
+    the ambient actshard plan matches the one active at build time (it
+    would otherwise silently bake into — or be missing from — the shared
+    trace)."""
+    ambient = actshard.active_plan()
+    if ambient is not None:
+        # private closure: the ambient plan's constraints bake in at trace
+        # time, so this trace must never be shared (plans are unhashable,
+        # and id()-keying would risk stale reuse after gc)
+        jitted = jax.jit(body)
+    else:
+        key = (kind, cfg, policy)
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = jax.jit(body)
+        jitted = _STEP_CACHE[key]
+
+    def checked(*args, _jitted=jitted, _ambient=ambient):
+        if actshard.active_plan() is not _ambient:
+            raise RuntimeError(
+                f"{kind} step was built under a different actshard plan "
+                "than is active now; rebuild it (make_prefill_step/"
+                "make_decode_step) inside the context you call it in"
+            )
+        return _jitted(*args)
+
+    return checked
+
+
+def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
+                      plan: Optional[ShardingPlan] = None):
+    prefill_step = _prefill_fn(cfg, policy)
     if plan is None:
-        return prefill_step
+        return _shared_step("prefill", cfg, policy, prefill_step)
     b = _plan_batch(plan)
     cache_sh = plan.cache_shardings()
     return jax.jit(
@@ -88,15 +169,15 @@ def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
     )
 
 
-def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *, greedy=True,
+def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *,
                      plan: Optional[ShardingPlan] = None):
-    def decode_step(params, token, cache):
-        logits, cache = registry.decode_step(cfg, policy, params, token, cache)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok, logits, cache
-
+    """The ONE greedy decode-step builder: ``generate``, :class:`PoolEngine`
+    and the tests all jit through here (a single closure per engine, not a
+    fresh lambda per ``generate`` call), so every caller decodes through
+    literally the same compiled step."""
+    decode_step = _decode_fn(cfg, policy)
     if plan is None:
-        return decode_step
+        return _shared_step("decode", cfg, policy, decode_step)
     b = _plan_batch(plan)
     cache_sh = plan.cache_shardings()
     tok_sh = plan.named(plan.token_pspec(b))
@@ -116,6 +197,205 @@ def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *, greedy=True,
     )
 
 
+# ---------------------------------------------------------------------------
+# Continuous-batching pool engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Host-side counters from one :meth:`PoolEngine.run`."""
+
+    decode_steps: int = 0
+    prefills: int = 0
+    emitted_tokens: int = 0
+    occupancy_sum: float = 0.0  # sum over decode steps of active/max_slots
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
+
+
+class PoolEngine:
+    """Continuous-batching serving engine over a slot-pooled KV cache.
+
+    Weights are PoT-prequantized at construction by default
+    (serve/quantized_weights.py): re-quantization at use is idempotent on
+    PoT values, so served outputs are bit-identical to quantize-at-use
+    while the decode weight-read term halves.  Pass ``prequantize=False``
+    to serve raw weights (or a disabled policy, which never quantizes).
+
+    The bit-identity guarantee holds for every family in
+    ``registry.POOLED_FAMILIES`` *except* MoE configs: expert-capacity
+    dispatch couples live tokens across slots (the capacity cap scales
+    with pool size and priority follows slot order), so MoE archs serve
+    correctly but are excluded from the bit-exact conformance matrix.
+    Retired slots ARE inert for MoE too — their rows are zeroed and
+    masked out of dispatch via the pool cache's per-slot ``active`` flag
+    (docs/DESIGN_serving.md).
+    """
+
+    def __init__(self, cfg: ModelConfig, policy: QuantPolicy, params, *,
+                 max_slots: int, max_len: int, cache_dtype=jnp.bfloat16,
+                 prequantize: bool = True,
+                 plan: Optional[ShardingPlan] = None):
+        if cfg.family not in registry.POOLED_FAMILIES:
+            raise NotImplementedError(
+                f"PoolEngine: family {cfg.family!r} lacks per-slot decode"
+            )
+        if prequantize and policy.enabled and not policy.weights_prequantized:
+            from repro.serve import quantized_weights as qw
+
+            params = qw.quantize_for_serving(cfg, policy, params)
+            policy = dataclasses.replace(policy, weights_prequantized=True)
+        # Batch-invariant decode: per-slot activation scale groups, so a
+        # row's quantization never depends on its pool neighbours.  At
+        # batch 1 (solo prefill, solo decode) this is bit-identical to the
+        # per-tensor reduction, so it changes nothing for lone requests.
+        policy = dataclasses.replace(policy, per_sample_act_scales=True)
+        if plan is not None and getattr(plan, "pool_slots", None) != max_slots:
+            raise ValueError(
+                "PoolEngine plans must be built with "
+                "planner.plan_for(..., pool_slots=max_slots) so the cache "
+                f"specs cover the lifted per-slot pos/len leaves; got "
+                f"pool_slots={getattr(plan, 'pool_slots', None)!r}, "
+                f"max_slots={max_slots}"
+            )
+        self.cfg = cfg
+        self.policy = policy
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.plan = plan
+        self._decode = make_decode_step(cfg, policy, plan=plan)
+        # batch-1 prefill-into-slot: plan-less jit (in-model activations
+        # are pinned through the actshard context when a plan is active).
+        # With a plan the step must be BUILT inside that context too (the
+        # builders' build-time/call-time plan contract), so defer to the
+        # first run(); the private closure is then reused across runs.
+        self._prefill = make_prefill_step(cfg, policy) if plan is None else None
+        self.last_stats: Optional[ServeStats] = None
+
+    # -- request admission -------------------------------------------------
+    def _validate(self, requests: Sequence[Request]) -> None:
+        seen = set()
+        for r in requests:
+            if r.uid in seen:
+                raise ValueError(f"duplicate request uid {r.uid!r}")
+            seen.add(r.uid)
+            plen = int(jnp.asarray(r.tokens).shape[-1])
+            if "patch_embeds" in r.extras:  # vlm prefix occupies positions
+                plen += int(jnp.asarray(r.extras["patch_embeds"]).shape[1])
+            need = plen + r.max_new_tokens
+            # Windowed archs decode from a ring whose wrap is the model
+            # semantics, and ssm state is O(1) in sequence length;
+            # everything else must fit the cache or the ring wrap would
+            # silently change the request's tokens.
+            if (self.cfg.family != "ssm" and self.cfg.window is None
+                    and need > self.max_len):
+                raise ValueError(
+                    f"request {r.uid!r}: prompt ({plen}) + max_new_tokens "
+                    f"({r.max_new_tokens}) = {need} exceeds the pool's "
+                    f"max_len={self.max_len}"
+                )
+
+    def _prefill_into(self, cache, slot: int, req: Request):
+        """Solo-prefill ``req`` (batch 1) and copy the result into ``slot``.
+        Returns (new pool cache, first generated token)."""
+        mini = registry.init_cache(self.cfg, 1, self.max_len, self.cache_dtype)
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)}
+        batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        logits, mini = self._prefill(self.params, batch, mini)
+        tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
+        # the active mask is pool-only state — keep it out of the
+        # pool-vs-mini structural copy (copy-on-write: never mutate the
+        # caller's cache dict)
+        act = cache.get("active") if isinstance(cache, dict) else None
+        if act is not None:
+            cache = {k: v for k, v in cache.items() if k != "active"}
+        cache = slots_lib.write_slot(cache, mini, slot)
+        if act is not None:
+            cache["active"] = act.at[slot].set(True)
+        return cache, tok
+
+    @staticmethod
+    def _deactivate(cache, slot: int):
+        if isinstance(cache, dict) and "active" in cache:
+            cache = dict(cache)
+            cache["active"] = cache["active"].at[slot].set(False)
+        return cache
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> Dict:
+        """Drive all ``requests`` to completion; returns {uid: np.ndarray of
+        generated token ids}.  Host-side loop; the pooled decode step is a
+        single fixed-shape jitted dispatch per step."""
+        self._validate(requests)
+        sched = FIFOScheduler(self.max_slots)
+        for r in requests:
+            sched.submit(r)
+        stats = ServeStats()
+        out: Dict = {r.uid: [] for r in requests}
+        remaining: Dict[int, int] = {}  # slot -> tokens still to emit
+        last_tok = np.zeros((self.max_slots,), np.int32)
+        step = 0
+
+        ctx = (actshard.use_plan(self.plan) if self.plan is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if self._prefill is None:  # plan mode: build inside the context
+                self._prefill = make_prefill_step(self.cfg, self.policy)
+            cache = registry.init_pool_cache(
+                self.cfg, self.max_slots, self.max_len, self.cache_dtype
+            )
+            while not sched.all_done():
+                for slot, req in sched.admit(step):
+                    cache, tok = self._prefill_into(cache, slot, req)
+                    stats.prefills += 1
+                    stats.emitted_tokens += 1
+                    out[req.uid].append(tok)
+                    last_tok[slot] = tok
+                    remaining[slot] = req.max_new_tokens - 1
+                    if remaining[slot] <= 0 or tok == req.eos_id:
+                        sched.retire(slot)
+                        cache = self._deactivate(cache, slot)
+                active = sched.active_slots()
+                if not active:
+                    # Fast-forward the clock to the next arrival instead of
+                    # spinning empty decode steps.
+                    nxt = sched.next_arrival()
+                    if nxt is None:
+                        break
+                    step = max(step + 1, nxt)
+                    continue
+                ntok, _, cache = self._decode(
+                    self.params, jnp.asarray(last_tok), cache
+                )
+                ntok_host = np.asarray(ntok)
+                stats.decode_steps += 1
+                stats.occupancy_sum += len(active) / self.max_slots
+                for slot in active:
+                    req = sched.active_request(slot)
+                    tok = int(ntok_host[slot])
+                    out[req.uid].append(tok)
+                    last_tok[slot] = tok
+                    stats.emitted_tokens += 1
+                    remaining[slot] -= 1
+                    if remaining[slot] <= 0 or tok == req.eos_id:
+                        sched.retire(slot)
+                        cache = self._deactivate(cache, slot)
+                sched.check_conservation()
+                step += 1
+        self.last_stats = stats
+        return {uid: np.asarray(toks, np.int32) for uid, toks in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# generate: thin wrappers
+# ---------------------------------------------------------------------------
+
+
 def generate(
     cfg: ModelConfig,
     policy: QuantPolicy,
@@ -126,26 +406,83 @@ def generate(
     max_len: int,
     cache_dtype=jnp.bfloat16,
     plan: Optional[ShardingPlan] = None,
+    prequantize: bool = False,
 ):
-    """Greedy generation driver (used by examples/tests; python loop).
+    """Greedy generation driver — a thin wrapper over a :class:`PoolEngine`
+    with one slot per request (all arrivals at step 0).
 
-    With ``plan`` (built for the serving mesh), in-model activations are
-    pinned through the plan for both prefill and every decode step; with
-    ``plan=None`` any ambient ``actshard`` context is left in effect.
+    Because pool decode is per-request bit-identical to solo decode, each
+    row of the result no longer depends on which other rows share the
+    batch (unlike :func:`lockstep_generate`, the pre-pool behaviour).
+    Returns (B, max_new_tokens) int32.
+
+    Families without per-slot decode (``hybrid``), and legacy plans built
+    without ``pool_slots``, fall back to :func:`lockstep_generate` — the
+    exact pre-pool behaviour those callers always had.
+
+    Each call with a pool plan builds (and re-jits) a fresh engine; a
+    sharded caller generating repeatedly should construct one
+    :class:`PoolEngine` and ``run`` traces through it instead.
+    """
+    toks = batch["tokens"]
+    b = toks.shape[0]
+    legacy_plan = plan is not None and getattr(plan, "pool_slots", None) != b
+    if cfg.family not in registry.POOLED_FAMILIES or legacy_plan:
+        return lockstep_generate(
+            cfg, policy, params, batch, max_new_tokens=max_new_tokens,
+            max_len=max_len, cache_dtype=cache_dtype, plan=plan,
+        )
+    reqs: List[Request] = []
+    for i in range(b):
+        extras = {
+            k: batch[k][i : i + 1]
+            for k in ("frames", "patch_embeds")
+            if k in batch
+        }
+        reqs.append(
+            Request(
+                uid=i, tokens=toks[i : i + 1],
+                max_new_tokens=max_new_tokens, extras=extras,
+            )
+        )
+    eng = PoolEngine(
+        cfg, policy, params, max_slots=b, max_len=max_len,
+        cache_dtype=cache_dtype, prequantize=prequantize, plan=plan,
+    )
+    out = eng.run(reqs)
+    return jnp.stack([jnp.asarray(out[i], jnp.int32) for i in range(b)], axis=0)
+
+
+def lockstep_generate(
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    params,
+    batch,
+    *,
+    max_new_tokens: int,
+    max_len: int,
+    cache_dtype=jnp.bfloat16,
+    plan: Optional[ShardingPlan] = None,
+):
+    """Pre-pool serving loop, kept as the servebench baseline: every request
+    enters at prefill time (one batched prefill, per-tensor activation
+    scales) and the whole batch decodes in lockstep to ``max_new_tokens``
+    — dead slots stream every weight for nothing.
     """
     b = batch["tokens"].shape[0]
     ctx = actshard.use_plan(plan) if plan is not None else contextlib.nullcontext()
     with ctx:
+        # plan-less jit on purpose: in-model activations are pinned through
+        # the actshard context, matching the historical decode loop.  Built
+        # inside the context, so a plan-carrying call gets a private
+        # plan-baked closure while plan-less calls share the step cache.
+        step = make_decode_step(cfg, policy)
+        prefill = make_prefill_step(cfg, policy)
         cache = registry.init_cache(cfg, b, max_len, cache_dtype)
-        logits, cache = registry.prefill(cfg, policy, params, batch, cache)
+        logits, cache = prefill(params, batch, cache)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [tok]
-        step = jax.jit(
-            lambda p, t, c: registry.decode_step(cfg, policy, p, t, c),
-            static_argnums=(),
-        )
         for _ in range(max_new_tokens - 1):
-            logits, cache = step(params, tok, cache)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok, _, cache = step(params, tok, cache)
             out.append(tok)
     return jnp.stack(out, axis=1)

@@ -1,0 +1,74 @@
+"""Slot-pooled KV cache: one fixed (max_slots x max_len) cache, per-slot state.
+
+The pool cache is built ONCE (``registry.init_pool_cache``) and lives for
+the whole engine: the batch axis of every ``registry.init_cache`` leaf is
+reinterpreted as the *slot* axis, and the position bookkeeping leaves are
+lifted from shared to per-slot:
+
+    pos  (span,)  ->  (max_slots, span)   per-slot key positions
+    len  ()       ->  (max_slots,)        per-slot sequence length
+
+``decode_step`` dispatches on ``len.ndim`` (models/transformer.py,
+models/encdec.py), so the same model code serves both the lockstep batch
+path and the pool.  Admitting a request is pure data movement:
+``write_slot`` copies a freshly prefilled batch-1 cache into one slot row
+— bit-exact by construction, which is what the serve conformance suite
+(tests/conformance/test_serve_batching.py) leans on.
+
+Retired slots are NOT cleared: a dead slot keeps decoding garbage into
+its own row (rows never mix — every matmul / softmax / quantization
+reduction in the decode step is row-local under
+``policy.per_sample_act_scales``), and the next ``write_slot`` overwrites
+the row wholesale.  The one cross-row computation is MoE expert-capacity
+dispatch: those pool caches carry a per-slot ``active`` flag
+(``registry.init_pool_cache``) that zeroes dead rows and masks them out
+of the dispatch cumsum, so garbage can never claim expert capacity from
+live requests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lift_cache(cache, max_slots: int):
+    """Lift a fresh ``registry.init_cache(cfg, max_slots, ...)`` tree to the
+    slot-pooled layout (per-slot ``pos``/``len``)."""
+
+    def one(path, x):
+        key = str(getattr(path[-1], "key", "")) if path else ""
+        if key == "len":
+            return jnp.zeros((max_slots,), x.dtype)
+        if key == "pos":
+            return jnp.tile(x[None], (max_slots,) + (1,) * x.ndim)
+        return x
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def write_slot(pool, mini, slot: int):
+    """Copy a batch-1 cache (``registry.init_cache(cfg, 1, max_len)`` after a
+    solo prefill) into row ``slot`` of the pool cache.
+
+    Leaf matching is structural: per-slot lifted leaves (``pos``/``len``)
+    have one fewer dim in the mini cache and are row-assigned; every other
+    leaf differs from its pool counterpart in exactly one axis — the slot
+    axis, wherever the family put it (axis 1 for the stacked-layer caches,
+    axis 0 for flat ones) — and is updated in place there.
+    """
+
+    def one(p, m):
+        m = m.astype(p.dtype)
+        if m.ndim == p.ndim - 1:  # lifted per-slot leaf (pos / len)
+            return p.at[slot].set(m)
+        if p.shape == m.shape:  # max_slots == 1: the row IS the pool
+            return m
+        diffs = [
+            d for d, (ps, ms) in enumerate(zip(p.shape, m.shape)) if ps != ms
+        ]
+        assert len(diffs) == 1 and m.shape[diffs[0]] == 1, (p.shape, m.shape)
+        idx = [0] * p.ndim
+        idx[diffs[0]] = slot
+        return jax.lax.dynamic_update_slice(p, m, tuple(idx))
+
+    return jax.tree_util.tree_map(one, pool, mini)

@@ -1,0 +1,48 @@
+"""Synthetic request traces for serving demos and benchmarks.
+
+One deterministic generator shared by ``benchmarks/servebench.py`` and
+``examples/serve_llm.py`` so the trace shape (Poisson arrivals measured
+in engine steps, mixed output budgets, per-family prompt extras) cannot
+drift between them.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.serve.scheduler import Request
+
+
+def poisson_trace(cfg, *, n_requests: int, prompt_len: int, lam: float,
+                  new_lo: int, new_hi: int, seed: int = 0) -> List[Request]:
+    """Poisson(lam) inter-arrivals (in decode steps, first at 0) + uniform
+    output budgets in [new_lo, new_hi].  Fixed prompt length keeps
+    lockstep waves rectangular (their layout requires it — one more thing
+    the pool doesn't).  Encdec frames / VLM patch embeddings are
+    synthesized per request."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.poisson(lam, n_requests))
+    arrivals[0] = 0
+    reqs = []
+    for i in range(n_requests):
+        toks = rng.integers(0, cfg.vocab, (1, prompt_len)).astype(np.int32)
+        extras = {}
+        if cfg.family == "encdec":
+            extras["frames"] = rng.standard_normal(
+                (1, cfg.enc_seq, cfg.frame_dim)
+            ).astype(np.float32)
+        if cfg.family == "vlm" and cfg.num_patches:
+            extras["patch_embeds"] = rng.standard_normal(
+                (1, cfg.num_patches, cfg.patch_dim)
+            ).astype(np.float32)
+        reqs.append(
+            Request(
+                uid=i,
+                tokens=toks,
+                max_new_tokens=int(rng.integers(new_lo, new_hi + 1)),
+                arrival=int(arrivals[i]),
+                extras=extras,
+            )
+        )
+    return reqs

@@ -43,6 +43,82 @@ def test_decode_matches_forward(arch):
         )
 
 
+@pytest.mark.parametrize("policy_kind", ["fp32", "serve"])
+@pytest.mark.parametrize(
+    "arch", ["llama3-8b", "mistral-nemo-12b", "whisper-large-v3"]
+)
+def test_pooled_decode_heterogeneous_positions(arch, policy_kind):
+    """Per-slot cache offsets (registry.init_pool_cache layout): decoding a
+    pool whose slots sit at different positions must reproduce, row by
+    row, each request's own sequential decode with the scalar-len cache.
+    mistral-nemo adds the sliding-window ring cache (span 8 < prompt
+    length), so per-slot ring wrap is covered too.
+
+    Under the serving policy (quantized + per-sample scales — what the
+    pool engine actually runs) the comparison is BITWISE at the logits
+    level.  Under the FP32 baseline it uses the file's 2e-4 tolerance:
+    whisper's raw-f32 decode has a pre-existing ~1e-7 batch-size
+    compilation wobble (XLA fuses the scan body differently for B=1 vs
+    B=3) that quantization's bf16-snapped operands do not exhibit."""
+    import dataclasses as _dc
+
+    from repro.core.policy import PAPER_FAITHFUL
+
+    if policy_kind == "fp32":
+        pol, exact = POL, False
+    else:
+        pol = _dc.replace(PAPER_FAITHFUL, per_sample_act_scales=True)
+        exact = True
+    cfg = C.smoke_config(arch)
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    from repro.serve import slots as slots_lib
+
+    max_len, steps = 24, 4
+    plens = (5, 9, 12)
+    rng = jax.random.PRNGKey(3)
+    minis, solo_logits, solo_toks = [], [], []
+    for i, plen in enumerate(plens):
+        toks = jax.random.randint(
+            jax.random.fold_in(rng, i), (1, plen), 0, cfg.vocab
+        )
+        batch = {"tokens": toks}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(rng, 100 + i),
+                (1, cfg.enc_seq, cfg.frame_dim),
+            )
+        cache = registry.init_cache(cfg, 1, max_len, dtype=jnp.float32)
+        lg, cache = registry.prefill(cfg, pol, params, batch, cache)
+        minis.append(cache)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        lgs, tks = [], [tok]
+        for _ in range(steps):
+            lg, cache = registry.decode_step(cfg, pol, params, tok, cache)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            lgs.append(lg)
+            tks.append(tok)
+        solo_logits.append(lgs)
+        solo_toks.append(tks)
+
+    pool = registry.init_pool_cache(cfg, len(plens), max_len, jnp.float32)
+    for i, mini in enumerate(minis):
+        pool = slots_lib.write_slot(pool, mini, i)
+    assert pool["len"].shape == (len(plens),)
+    np.testing.assert_array_equal(
+        np.asarray(pool["len"]), np.asarray(plens)
+    )
+    for t in range(steps):
+        tok = jnp.concatenate([solo_toks[i][t] for i in range(len(plens))])
+        lg, pool = registry.decode_step(cfg, pol, params, tok, pool)
+        for i in range(len(plens)):
+            got, want = np.asarray(lg[i]), np.asarray(solo_logits[i][t][0])
+            msg = f"{arch} slot {i} pooled step {t}"
+            if exact:
+                np.testing.assert_array_equal(got, want, err_msg=msg)
+            else:
+                np.testing.assert_allclose(got, want, atol=2e-4, err_msg=msg)
+
+
 def test_sliding_window_ring_cache():
     """Windowed decode (ring cache) matches forward once the window wraps."""
     import dataclasses

@@ -51,6 +51,29 @@ def test_plan_degrades_to_replication_on_host_mesh(arch):
             assert n == 1, (rep.path, d)
 
 
+def test_pooled_serving_plan_keyed_by_slot_count():
+    """plan_for(pool_slots=) plans the slot-pooled cache tree: structure
+    matches registry.init_pool_cache, lifted pos/len leaves are replicated
+    (tiny int32 bookkeeping), and the production mesh still validates."""
+    from repro.models import registry
+
+    cfg = C.smoke_config("llama3-8b")
+    shape = C.ShapeConfig("serve", 32, 8, "decode")
+    for mesh in (meshes.make_host_mesh(),
+                 meshes.make_abstract_mesh((16, 16), ("data", "model"))):
+        plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=8)
+        assert plan.pool_slots == 8
+        pooled = jax.eval_shape(lambda: registry.init_pool_cache(cfg, 8, 32))
+        assert (jax.tree_util.tree_structure(pooled)
+                == jax.tree_util.tree_structure(plan.cache))
+        assert plan.cache_abstract["pos"].shape == (8, 32)
+        assert plan.cache_abstract["len"].shape == (8,)
+        assert plan.cache["pos"] == P() and plan.cache["len"] == P()
+    with pytest.raises(planner.ShardingPlanError, match="pool_slots"):
+        planner.plan_for(cfg, meshes.make_host_mesh(), shape=shape,
+                         pool_slots=4)
+
+
 def test_plan_moe_decisions():
     """llama4 (16e) -> EP over the 16-way model axis; grok (8e) -> TP
     inside each expert (8 does not divide 16)."""
