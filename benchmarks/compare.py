@@ -1,0 +1,196 @@
+"""CI perf-trend gate: current benchmark JSON vs committed baselines.
+
+The repo commits two baselines at its root:
+
+* ``BENCH_servebench.json`` — ``benchmarks/servebench.py --smoke`` output.
+* ``BENCH_kernelbench.json`` — ``benchmarks/kernelbench.py --json`` rows.
+
+CI regenerates both artifacts on every run and calls this script, which
+**fails** on a >10% regression in the *deterministic* counters and only
+**warns** on wall-clock drift (shared runners are noisy; structural
+counters are not):
+
+servebench (exactly reproducible for the fixed smoke trace):
+  - decode-step counts (pool / pool_chunked / lockstep)
+  - weight passes (every full weight-streaming dispatch, admissions
+    included — the chunked-prefill win lives here)
+  - mean time-to-first-token in weight passes (admission latency)
+  It also re-asserts the cross-engine invariants (pool < lockstep steps;
+  chunked < solo-prefill passes and TTFT), so a regression can't slip in
+  by moving baseline and current together.
+
+kernelbench (dimensionless, machine-normalized):
+  - ``speedup_x`` of the ``potq_grad_fused_*`` rows (fused-vs-composed
+    backward ratio) and the ``potq_matmul_tuned_*`` rows
+    (tuned-vs-default ratio; >= 1.0 by argmin construction).  A ratio of
+    two same-run min-of-iters timings is far more stable than raw us but
+    not exactly reproducible, so its hard gate uses 2x the counter
+    tolerance (drops inside [tol, 2*tol] warn).
+
+Raw microsecond columns are wall-clock => warn-only.
+
+  PYTHONPATH=src python benchmarks/compare.py \
+      --kind servebench --baseline BENCH_servebench.json \
+      --current artifacts/servebench.json
+
+Regenerate a baseline intentionally (e.g. after a scheduling change) by
+re-running the benchmark and committing the new JSON with the change that
+moved it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+#: deterministic servebench counters: (json path, lower-is-better)
+SERVE_COUNTERS = [
+    ("pool.decode_steps", True),
+    ("pool.weight_passes", True),
+    ("pool.mean_ttft_passes", True),
+    ("pool_chunked.decode_steps", True),
+    ("pool_chunked.weight_passes", True),
+    ("pool_chunked.mean_ttft_passes", True),
+    ("lockstep.decode_steps", True),
+]
+
+#: wall-clock servebench fields (higher is better) — warn only
+SERVE_WALLCLOCK = [
+    "pool.tokens_per_s",
+    "pool_chunked.tokens_per_s",
+    "lockstep.tokens_per_s",
+    "speedup_tokens_per_s",
+]
+
+
+def _get(d, path):
+    for part in path.split("."):
+        d = d[part]
+    return d
+
+
+def compare_servebench(base, cur, tol):
+    failures, warnings = [], []
+    setup = ("trace", "requests", "slots", "prefill_chunk")
+    if any(base.get(k) != cur.get(k) for k in setup):
+        failures.append(
+            "servebench setup mismatch: baseline and current ran different "
+            "configurations ("
+            + ", ".join(f"{k}: {base.get(k)} vs {cur.get(k)}"
+                        for k in setup if base.get(k) != cur.get(k))
+            + ") — counters are not comparable; regenerate "
+            "BENCH_servebench.json"
+        )
+        return failures, warnings
+    for path, lower_better in SERVE_COUNTERS:
+        b, c = float(_get(base, path)), float(_get(cur, path))
+        worse = (c - b) if lower_better else (b - c)
+        if b > 0 and worse / b > tol:
+            failures.append(
+                f"servebench {path}: {c:g} vs baseline {b:g} "
+                f"({100 * worse / b:+.1f}% worse, tol {100 * tol:.0f}%)"
+            )
+    # cross-engine invariants must hold in the CURRENT run on their own
+    if _get(cur, "pool.decode_steps") >= _get(cur, "lockstep.decode_steps"):
+        failures.append("servebench: pool no longer beats lockstep on steps")
+    if (_get(cur, "pool_chunked.weight_passes")
+            >= _get(cur, "pool.weight_passes")):
+        failures.append(
+            "servebench: chunked prefill no longer reduces weight passes "
+            "vs solo-prefill admission"
+        )
+    if (_get(cur, "pool_chunked.mean_ttft_passes")
+            >= _get(cur, "pool.mean_ttft_passes")):
+        failures.append(
+            "servebench: chunked prefill no longer reduces mean TTFT "
+            "vs solo-prefill admission"
+        )
+    for path in SERVE_WALLCLOCK:
+        b, c = float(_get(base, path)), float(_get(cur, path))
+        if b > 0 and (b - c) / b > tol:
+            warnings.append(
+                f"servebench {path} (wall-clock): {c:.1f} vs baseline "
+                f"{b:.1f} ({100 * (c - b) / b:+.1f}%)"
+            )
+    return failures, warnings
+
+
+_SPEEDUP_RE = re.compile(r"speedup_x=([0-9.]+)")
+
+
+def _ratio_rows(rows):
+    out = {}
+    for row in rows:
+        name = row["name"]
+        if name.startswith(("potq_grad_fused_", "potq_matmul_tuned_")):
+            m = _SPEEDUP_RE.search(row.get("derived", ""))
+            if m:
+                out[name] = float(m.group(1))
+    return out
+
+
+def compare_kernelbench(base, cur, tol):
+    # The speedup_x gate uses 2*tol: unlike servebench's exactly-
+    # trace-determined counters, the ratio divides two min-of-iters
+    # timings from the same run — machine-normalized and far more stable
+    # than raw us, but still carrying partially-correlated runner noise.
+    rtol = 2 * tol
+    failures, warnings = [], []
+    b_ratios, c_ratios = _ratio_rows(base), _ratio_rows(cur)
+    for name, b in sorted(b_ratios.items()):
+        if name not in c_ratios:
+            failures.append(f"kernelbench row {name} disappeared")
+            continue
+        c = c_ratios[name]
+        if b > 0 and (b - c) / b > rtol:
+            failures.append(
+                f"kernelbench {name}: speedup_x {c:.2f} vs baseline {b:.2f} "
+                f"({100 * (c - b) / b:+.1f}%, tol {100 * rtol:.0f}%)"
+            )
+        elif b > 0 and (b - c) / b > tol:
+            warnings.append(
+                f"kernelbench {name}: speedup_x {c:.2f} vs baseline {b:.2f} "
+                f"({100 * (c - b) / b:+.1f}%) — inside the 2x noise band"
+            )
+    b_us = {r["name"]: r["us"] for r in base}
+    for row in cur:
+        b = b_us.get(row["name"])
+        if b and b > 0 and (row["us"] - b) / b > 5 * tol:
+            warnings.append(
+                f"kernelbench {row['name']} (wall-clock): {row['us']:.1f}us "
+                f"vs baseline {b:.1f}us ({100 * (row['us'] - b) / b:+.1f}%)"
+            )
+    return failures, warnings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", choices=["servebench", "kernelbench"],
+                    required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="fractional regression tolerance for the "
+                         "deterministic counters (default 10%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+    fn = (compare_servebench if args.kind == "servebench"
+          else compare_kernelbench)
+    failures, warnings = fn(base, cur, args.tolerance)
+    for w in warnings:
+        print(f"WARNING: {w}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"{args.kind}: no regression vs {args.baseline} "
+          f"(tol {100 * args.tolerance:.0f}%; {len(warnings)} warnings)")
+
+
+if __name__ == "__main__":
+    main()

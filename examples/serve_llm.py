@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--arrival-lam", type=float, default=2.0)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="enable chunked piggybacked prefill: admission "
+                         "prompts stream C tokens per pooled step instead "
+                         "of a solo batch-1 prefill pass per request")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -51,6 +55,7 @@ def main():
         cfg, PAPER_FAITHFUL, params,
         max_slots=args.slots,
         max_len=prefix + args.prompt_len + args.new_tokens,
+        prefill_chunk=args.prefill_chunk,
     )
     t0 = time.time()
     out = engine.run(reqs)
@@ -60,7 +65,9 @@ def main():
     print(
         f"arch={cfg.name} served {len(reqs)} requests / {total} tokens "
         f"in {dt:.1f}s ({total / dt:.1f} tok/s, {st.decode_steps} pooled "
-        f"decode steps, occupancy {st.mean_occupancy:.0%}, CPU smoke scale)"
+        f"steps, {st.weight_passes} weight passes, mean TTFT "
+        f"{st.mean_ttft_passes:.1f} passes, occupancy "
+        f"{st.mean_occupancy:.0%}, CPU smoke scale)"
     )
     print("sample:", out[0][:12].tolist())
 

@@ -4,7 +4,10 @@ The public entry points are
 
 * :func:`mf_linear`       — a[..., K] @ w[K, N]   (dense projections)
 * :func:`mf_expert_linear`— a[E, T, K] @ w[E, K, N] (MoE experts, per-expert
-  layer-wise scales: each expert is its own "layer")
+  layer-wise scales: each expert is its own "layer"; serving's per-slot
+  dispatch vmaps this over the slot axis so the scale groups become
+  per-(expert, slot) and decode stays batch-invariant —
+  models/transformer.py `_moe_apply(per_slot=True)`)
 * :func:`mf_act_dot`      — activation x activation dot_general (attention
   QK^T / PV), beyond-paper opt-in (policy.quantize_attention)
 

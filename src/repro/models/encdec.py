@@ -387,3 +387,124 @@ def decode_step(cfg, policy, params, token, cache):
     new_cache["pos"] = kpos
     new_cache["len"] = pos + 1
     return logits, new_cache
+
+
+def encode_cross_kv(cfg, policy, params, frames):
+    """Encoder pass + per-decoder-layer cross-attention K/V for chunked
+    admission (serve/engine.py): the encoder side of prefill without
+    touching the decoder prompt, whose tokens then stream in C at a time
+    via :func:`chunk_step`.  Returns (ck, cv), each (L, B, enc_seq, KV, hd).
+    """
+    enc_out = encode(cfg, policy, params, frames, remat=False)
+    b, se = enc_out.shape[0], enc_out.shape[1]
+    hd = cfg.head_dim
+
+    def body(carry, lp):
+        ck_ = _proj_heads(lp, "ck", enc_out, policy, b, se, cfg.kv_heads, hd)
+        cv_ = _proj_heads(lp, "cv", enc_out, policy, b, se, cfg.kv_heads, hd)
+        return carry, (ck_, cv_)
+
+    _, (cks, cvs) = jax.lax.scan(body, 0, params["dec_layers"])
+    return cks, cvs
+
+
+def chunk_step(cfg, policy, params, tokens, n_new, cache):
+    """Fused decode/prefill-chunk step over ``(B, C)`` positions — the
+    encdec mirror of ``transformer.chunk_step`` (same padding discipline:
+    qpos -1, dropped scatters, per-row determinism).  Cross-attention
+    reads the per-slot ``ck``/``cv`` written at admission by
+    :func:`encode_cross_kv`."""
+    b, c = tokens.shape
+    hd = cfg.head_dim
+    pos0 = cache["len"]
+    assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
+    span = cache["k"].shape[2]
+    assert c <= span, (c, span)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
+    rows = jnp.arange(b)
+    offs = jax.lax.iota(jnp.int32, c)
+    valid = offs[None, :] < n_new[:, None]
+    gpos = pos0[:, None] + offs[None, :]
+    qpos = jnp.where(valid, gpos, -1)
+    sidx = jnp.where(valid, gpos % span, span)
+    kpos_old = cache["pos"]
+    kpos_new = kpos_old.at[rows[:, None], sidx].set(qpos, mode="drop")
+    se = cache["ck"].shape[2]
+    epos = jax.lax.iota(jnp.int32, se)
+
+    def body(carry, lp_kv):
+        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q = _proj_heads(lp, "wq", h, policy, b, c, cfg.n_heads, hd)
+        k = _proj_heads(lp, "wk", h, policy, b, c, cfg.kv_heads, hd)
+        v = _proj_heads(lp, "wv", h, policy, b, c, cfg.kv_heads, hd)
+        q = common.rope(q, qpos, cfg.rope_theta)
+        k = common.rope(k, qpos, cfg.rope_theta)
+        nk = ck_self.at[rows[:, None], sidx].set(
+            k.astype(ck_self.dtype), mode="drop"
+        )
+        nv = cv_self.at[rows[:, None], sidx].set(
+            v.astype(cv_self.dtype), mode="drop"
+        )
+        from repro.models.transformer import _sdpa
+
+        k_all = jnp.concatenate([ck_self.astype(q.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv_self.astype(q.dtype), v], axis=1)
+        kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)
+        att = _sdpa(cfg, policy, q, k_all, v_all, qpos, kpos_all, None)
+        # Pad queries' all-False mask degenerates softmax to a uniform
+        # average over every key — stale K/V from a reused slot included.
+        # Zero pad rows so they stay functions of their own tokens only
+        # (transformer.chunk_step has the same guard).
+        att = jnp.where(
+            valid[:, :, None], att.reshape(b, c, cfg.n_heads * hd), 0.0
+        )
+        y = carry + mfmac.mf_linear(
+            att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy,
+        )
+        hc = common.layer_norm(y, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"])
+        cq = _proj_heads(lp, "cq", hc, policy, b, c, cfg.n_heads, hd)
+        catt = _mha(
+            cfg, policy, cq, ck_x.astype(cq.dtype), cv_x.astype(cq.dtype),
+            qpos, epos, causal=False,
+        )
+        # cross-attention reads only the slot's own per-request ck/cv,
+        # but zero pad rows anyway so their downstream values cannot
+        # depend on any cache state at all
+        catt = jnp.where(
+            valid[:, :, None], catt.reshape(b, c, cfg.n_heads * hd), 0.0
+        )
+        y = y + mfmac.mf_linear(
+            catt, lp["co"]["w"], lp["co"]["gamma"], policy=policy,
+        )
+        h2 = common.layer_norm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        m = common.gelu(
+            mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
+        )
+        y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
+        return y, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
+    )
+    emit = jnp.clip(n_new - 1, 0, c - 1)
+    xe = x[rows, emit][:, None, :]
+    xe = common.layer_norm(
+        xe, params["dec_norm"]["scale"], params["dec_norm"]["bias"]
+    )
+    import dataclasses as _dc
+
+    _pol = (_dc.replace(policy, weights_prequantized=False)
+            if policy.weights_prequantized else policy)
+    w = params["embed"].T
+    logits = mfmac.mf_linear(
+        xe, w, jnp.float32(policy.ratio_clip_init or 1.0), policy=_pol,
+        is_last=True,
+    )[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["k"] = nk
+    new_cache["v"] = nv
+    new_cache["pos"] = kpos_new
+    new_cache["len"] = pos0 + n_new
+    return logits, new_cache

@@ -169,7 +169,12 @@ def _rglru_block(cfg, policy, p, x, *, conv_state=None, lru_state=None):
 
 
 def _attn_block(cfg, policy, p, x, qpos, *, cache=None):
-    """Local-attention block; cache=(k, v, kpos, slot) for decode."""
+    """Local-attention block; cache=(k, v, kpos, slot) for decode.
+
+    ``qpos`` is 1-D (positions shared across the batch — training /
+    lockstep decode) or 2-D ``(B, S)`` (per-slot offsets, slot-pooled
+    serving); a 2-D ``kpos`` in the cache tuple selects the per-slot
+    scatter, mirroring ``transformer.decode_step``."""
     b, s, d = x.shape
     hd = cfg.head_dim
     h = common.rms_norm(x, p["ln1"]["scale"])
@@ -179,14 +184,23 @@ def _attn_block(cfg, policy, p, x, qpos, *, cache=None):
     q = q.reshape(b, s, cfg.n_heads, hd)
     k = k.reshape(b, s, cfg.kv_heads, hd)
     v = v.reshape(b, s, cfg.kv_heads, hd)
-    pq = jnp.broadcast_to(qpos[None, :], (b, s))
+    pq = qpos if qpos.ndim == 2 else jnp.broadcast_to(qpos[None, :], (b, s))
     q = common.rope(q, pq, cfg.rope_theta)
     k = common.rope(k, pq, cfg.rope_theta)
     new_kv = (k, v)
     if cache is not None:
         ck, cv, kpos, slot = cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        if kpos.ndim == 2:  # slot-pooled: per-row scatter at [row, slot]
+            rows = jnp.arange(b)
+            ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, slot, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, slot, 0, 0)
+            )
         k, v = ck.astype(q.dtype), cv.astype(q.dtype)
         new_kv = (ck, cv)
     else:
@@ -297,16 +311,30 @@ def prefill(cfg, policy, params, tokens, cache):
 
 
 def decode_step(cfg, policy, params, token, cache):
+    """One decode step.  Accepts both the lockstep cache (scalar ``len``,
+    shared per-layer ``pos``) and the slot-pooled cache (``len`` (B,),
+    per-layer ``pos`` (B, span)) — the recurrent conv/lru states are
+    per-row already, so only the attention layers needed per-slot
+    positions (serve/slots.py)."""
+    b = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)
     pos = cache["len"]
-    qpos = pos[None].astype(jnp.int32)
+    per_slot = pos.ndim == 1
+    rows = jnp.arange(b)
     kinds = layer_kinds(cfg)
     new_layers = []
     for kind, p, c in zip(kinds, params["layers"], cache["layers"]):
         if kind == "attn":
             span = c["k"].shape[1]
             slot = pos % span
-            kpos = jax.lax.dynamic_update_slice(c["pos"], pos[None], (slot,))
+            if per_slot:
+                qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
+                kpos = c["pos"].at[rows, slot].set(pos)  # (B, span)
+            else:
+                qpos = pos[None].astype(jnp.int32)
+                kpos = jax.lax.dynamic_update_slice(
+                    c["pos"], pos[None], (slot,)
+                )
             x, (nk, nv) = _attn_block(
                 cfg, policy, p, x, qpos, cache=(c["k"], c["v"], kpos, slot)
             )

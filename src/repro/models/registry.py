@@ -68,11 +68,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 #: Families whose ``decode_step`` accepts the slot-pooled cache layout
-#: (per-slot ``len``/``pos``; serve/slots.py).  ``hybrid`` still decodes
-#: its attention layers from a single shared position — extend
-#: ``recurrent.decode_step`` the same way transformer/encdec were before
-#: adding it here.
-POOLED_FAMILIES = ("decoder", "vlm", "encdec", "ssm")
+#: (per-slot ``len``/``pos``; serve/slots.py).  All decode families pool:
+#: transformer/encdec/hybrid carry per-slot attention positions, ssm's
+#: recurrent state is per-row by construction.
+POOLED_FAMILIES = ("decoder", "vlm", "encdec", "ssm", "hybrid")
+
+#: Families whose ``chunk_step`` fuses decode rows and prefill-chunk rows
+#: into one fixed-shape pooled step (chunked piggybacked prefill,
+#: serve/engine.py).  ``ssm``/``hybrid`` decode one position at a time
+#: (their recurrences have no multi-token step), so they admit via solo
+#: prefill instead.
+CHUNKED_FAMILIES = ("decoder", "vlm", "encdec")
 
 
 def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
@@ -88,14 +94,8 @@ def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
         )
     from repro.serve import slots  # lazy: registry stays importable alone
 
-    cache = slots.lift_cache(init_cache(cfg, max_slots, max_len, dtype),
-                             max_slots)
-    if cfg.moe is not None:
-        # MoE dispatch couples slots through expert capacity: retired
-        # slots are zeroed + masked out of dispatch via this per-slot
-        # flag (transformer.decode_step / _moe_apply)
-        cache["active"] = jnp.zeros((max_slots,), bool)
-    return cache
+    return slots.lift_cache(init_cache(cfg, max_slots, max_len, dtype),
+                            max_slots)
 
 
 def prefill(cfg, policy, params, batch, cache):
@@ -126,4 +126,30 @@ def decode_step(cfg, policy, params, token, cache):
         return recurrent.decode_step(cfg, policy, params, token, cache)
     if cfg.family == "encdec":
         return encdec.decode_step(cfg, policy, params, token, cache)
+    raise ValueError(cfg.family)
+
+
+def chunk_step(cfg, policy, params, tokens, n_new, cache):
+    """One fused pooled step over ``(B, C)`` token positions: decode rows
+    are chunks with one valid token, prefilling rows consume up to C
+    prompt tokens.  ``n_new`` (B,) int32 counts each slot's valid
+    positions (0 = idle slot).  Returns (logits (B, V) at each slot's
+    last valid position, new pooled cache).  Chunked piggybacked prefill
+    (serve/engine.py); slot-pooled caches only."""
+    if cfg.family in ("decoder", "vlm"):
+        return transformer.chunk_step(cfg, policy, params, tokens, n_new, cache)
+    if cfg.family == "encdec":
+        return encdec.chunk_step(cfg, policy, params, tokens, n_new, cache)
+    raise NotImplementedError(
+        f"family {cfg.family!r} has no fused chunk step "
+        f"(supported: {CHUNKED_FAMILIES})"
+    )
+
+
+def encode_cross_kv(cfg, policy, params, frames):
+    """Encoder-side admission for chunked encdec serving: encoder pass +
+    per-decoder-layer cross K/V (written into a slot by the engine, then
+    the decoder prompt streams through ``chunk_step``)."""
+    if cfg.family == "encdec":
+        return encdec.encode_cross_kv(cfg, policy, params, frames)
     raise ValueError(cfg.family)

@@ -126,25 +126,32 @@ def _mlp_apply(cfg: ModelConfig, policy: QuantPolicy, p, x):
 
 
 def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x,
-               group_size: int = 512, active=None):
+               group_size: int = 512, per_slot: bool = False):
     """GShard-style capacity dispatch; experts run via mf_expert_linear.
 
     x: (B, S, D).  Tokens are flattened and regrouped into groups of
     ``group_size`` so dispatch-einsum FLOPs stay ~O(tokens * group_size)
     instead of O(tokens * seq_len) (DESIGN.md §4).
 
-    ``active`` (pool decode only, (B,) bool with S == 1): retired serving
-    slots are masked out of the dispatch cumsum, so their garbage tokens
-    never claim expert capacity or displace live requests
-    (docs/DESIGN_serving.md §3).
+    ``per_slot`` (decode / serving): every batch row is its own dispatch
+    group with its own capacity, so the expert-capacity cumsum never
+    crosses rows.  This is what makes MoE decode *batch-invariant* — a
+    serving slot's tokens can neither displace nor be displaced by a
+    neighbouring slot's (live or retired), which puts MoE inside the
+    pool-vs-solo bit-identity guarantee (docs/DESIGN_serving.md §3).  At
+    batch 1 a per-slot group and the flat group coincide exactly.
     """
     m = cfg.moe
     b, s, d = x.shape
     n_tok = b * s
-    t = min(group_size, n_tok)
-    g = n_tok // t
-    assert g * t == n_tok, (b, s, group_size)
-    xg = x.reshape(g, t, d)
+    if per_slot:
+        g, t = b, s
+        xg = x
+    else:
+        t = min(group_size, n_tok)
+        g = n_tok // t
+        assert g * t == n_tok, (b, s, group_size)
+        xg = x.reshape(g, t, d)
 
     router_logits = mfmac.mf_linear(
         xg, p["router"]["w"], p["router"]["gamma"], policy=policy
@@ -161,10 +168,6 @@ def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x,
     idx_flat = expert_idx.reshape(g, t * m.top_k)
     gate_flat = gate_vals.reshape(g, t * m.top_k)
     onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.float32)  # (G, T*k, E)
-    if active is not None:
-        assert g == 1 and s == 1 and active.shape == (b,), (g, s, active.shape)
-        act = jnp.repeat(active.astype(jnp.float32), m.top_k)  # (T*k,)
-        onehot = onehot * act[None, :, None]
     pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0  # position in expert
     keep = (pos >= 0) & (pos < cap)
     combine = (
@@ -180,11 +183,21 @@ def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x,
     expert_in = jnp.einsum(
         "gtec,gtd->egcd", dispatch, xk, preferred_element_type=jnp.float32
     ).astype(x.dtype)
-    ein = expert_in.reshape(e, g * cap, d)
+    ein = expert_in if per_slot else expert_in.reshape(e, g * cap, d)
 
     def expert_ffn(name):
         q = p[name]
-        return lambda h: mfmac.mf_expert_linear(h, q["w"], q["gamma"], policy=policy)
+
+        def f(h):
+            return mfmac.mf_expert_linear(h, q["w"], q["gamma"], policy=policy)
+
+        if per_slot:
+            # Per-(expert, slot) activation-scale groups: vmapping over
+            # the slot axis G gives every slot's dispatched tokens their
+            # own ALS beta / PRC threshold, so expert quantization — like
+            # the dispatch cumsum above — never couples pool rows.
+            return jax.vmap(f, in_axes=1, out_axes=1)
+        return f
 
     if cfg.act == "swiglu":
         hg = expert_ffn("gate")(ein)
@@ -192,7 +205,9 @@ def _moe_apply(cfg: ModelConfig, policy: QuantPolicy, p, x,
         h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
     else:
         h = common.gelu(expert_ffn("gate")(ein))
-    eout = expert_ffn("down")(h).reshape(e, g, cap, d)
+    eout = expert_ffn("down")(h)
+    if not per_slot:
+        eout = eout.reshape(e, g, cap, d)
 
     out = jnp.einsum(
         "egcd,gtec->gtd",
@@ -449,15 +464,13 @@ def decode_step(cfg, policy, params, token, cache):
       slot with its own cache offset, so requests admitted mid-flight
       decode next to requests deep into generation (serve/engine.py).
 
-    MoE pool caches additionally carry ``active`` (B,) bool: retired
-    slots' rows are zeroed and masked out of expert-capacity dispatch so
-    their garbage can never displace live requests' tokens.
+    MoE layers dispatch **per slot** (``_moe_apply(per_slot=True)``): each
+    row has its own expert capacity, so neither retired nor live
+    neighbours can change a request's expert routing — MoE decode is
+    batch-invariant like everything else in this step.
     """
     b = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)
-    active = cache.get("active")  # pool caches of MoE configs only
-    if active is not None:
-        x = jnp.where(active[:, None, None], x, jnp.zeros_like(x))
     pos = cache["len"]
     per_slot = pos.ndim == 1
     span = cache["k"].shape[2]
@@ -506,9 +519,7 @@ def decode_step(cfg, policy, params, token, cache):
         )
         h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
         if cfg.moe is not None:
-            y = y + _moe_apply(
-                cfg, policy, lp["moe"], h2, group_size=b, active=active
-            )
+            y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
         else:
             y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
         return y, (ck, cv)
@@ -524,6 +535,97 @@ def decode_step(cfg, policy, params, token, cache):
         "pos": kpos_new,
         "len": pos + 1,
     }
-    if active is not None:
-        new_cache["active"] = active
+    return logits, new_cache
+
+
+def chunk_step(cfg, policy, params, tokens, n_new, cache):
+    """One fused pooled step over ``(B, C)`` token positions — the chunked
+    piggybacked-prefill step body (serve/engine.py).
+
+    Every slot advances by its own ``n_new[b]`` (0..C) positions in the
+    same fixed-shape dispatch: decode slots carry one valid token
+    (``tokens[b, 0]``), prefilling slots consume up to C prompt tokens,
+    idle slots carry none.  Positions past ``n_new[b]`` are padding: their
+    qpos is -1 (they attend to nothing and are never written to the
+    cache), their K/V scatters are dropped via out-of-bounds indices, and
+    their activations are deterministic per row — so each slot's outputs
+    depend only on its own (tokens, n_new) trajectory, never on its pool
+    neighbours (the serve bit-identity guarantee, chunked edition).
+
+    Within-chunk attention runs over [ring cache ∪ fresh chunk K/V] so a
+    ring wrap inside the chunk (windowed archs) can't overwrite keys that
+    earlier chunk positions still need; requires C <= span.
+
+    Returns (logits (B, V) at each slot's last valid position, new pooled
+    cache).  Slot-pooled caches only (``len`` (B,), ``pos`` (B, span)).
+    """
+    b, c = tokens.shape
+    pos0 = cache["len"]
+    assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
+    span = cache["k"].shape[2]
+    assert c <= span, (c, span)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
+    rows = jnp.arange(b)
+    offs = jax.lax.iota(jnp.int32, c)
+    valid = offs[None, :] < n_new[:, None]  # (B, C)
+    gpos = pos0[:, None] + offs[None, :]  # (B, C) global positions
+    qpos = jnp.where(valid, gpos, -1)
+    # ring slot per valid position; invalid positions scatter out of
+    # bounds and are dropped (C <= span => no duplicate valid slots)
+    sidx = jnp.where(valid, gpos % span, span)
+    kpos_old = cache["pos"]  # (B, span), pre-step — all entries < pos0
+    kpos_new = kpos_old.at[rows[:, None], sidx].set(qpos, mode="drop")
+
+    def carry_block(carry, lp_kv):
+        lp, ck, cv = lp_kv
+        h = common.apply_norm(cfg.norm, carry, lp["ln1"])
+        q = mfmac.mf_linear(h, lp["wq"]["w"], lp["wq"]["gamma"], policy=policy)
+        k = mfmac.mf_linear(h, lp["wk"]["w"], lp["wk"]["gamma"], policy=policy)
+        v = mfmac.mf_linear(h, lp["wv"]["w"], lp["wv"]["gamma"], policy=policy)
+        q = q.reshape(b, c, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, c, cfg.kv_heads, cfg.head_dim)
+        v = v.reshape(b, c, cfg.kv_heads, cfg.head_dim)
+        q = common.rope(q, qpos, cfg.rope_theta)
+        k = common.rope(k, qpos, cfg.rope_theta)
+        nk = ck.at[rows[:, None], sidx].set(k.astype(ck.dtype), mode="drop")
+        nv = cv.at[rows[:, None], sidx].set(v.astype(cv.dtype), mode="drop")
+        # attend over [old cache ∪ fresh chunk]: old entries hold only
+        # positions < pos0, fresh ones >= pos0 (qpos -1 where invalid),
+        # so the position mask sees each key exactly once
+        k_all = jnp.concatenate([ck.astype(q.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv.astype(q.dtype), v], axis=1)
+        kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)  # (B, span+C)
+        att = _sdpa(cfg, policy, q, k_all, v_all, qpos, kpos_all, cfg.window)
+        att = att.reshape(b, c, cfg.n_heads * cfg.head_dim)
+        # A pad query's mask is all-False => softmax degenerates to a
+        # UNIFORM average over every key — including a reused slot's
+        # stale K/V, which would leak into the slot's shared (C, D)
+        # activation-scale group and break pool-vs-solo bit-identity.
+        # Zero it: pad rows then depend only on their own (token, n_new).
+        att = jnp.where(valid[:, :, None], att, 0.0)
+        y = carry + mfmac.mf_linear(
+            att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
+        )
+        h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
+        if cfg.moe is not None:
+            y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
+        else:
+            y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
+        return y, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        carry_block, x, (params["layers"], cache["k"], cache["v"])
+    )
+    # emit at each slot's last valid position (gather BEFORE the head so
+    # its activation-scale group is the (1, D) row, same as decode_step)
+    emit = jnp.clip(n_new - 1, 0, c - 1)
+    xe = x[rows, emit][:, None, :]  # (B, 1, D)
+    xe = common.apply_norm(cfg.norm, xe, params["final_norm"])
+    logits = _lm_head(cfg, policy, params, xe)[:, 0, :]
+    new_cache = {
+        "k": nk,
+        "v": nv,
+        "pos": kpos_new,
+        "len": pos0 + n_new,
+    }
     return logits, new_cache

@@ -175,6 +175,12 @@ class ShardingPlan:
         """(B,) per-step decode tokens: batch over the FSDP axes."""
         return self.activation_pspec(1, batch_size=batch_size)
 
+    def chunk_pspec(self, batch_size: int) -> P:
+        """(B, C) chunked-prefill token block (serve.make_chunk_step):
+        slots over the FSDP axes, the chunk axis replicated — C is a
+        handful of int32 per slot, never worth sharding."""
+        return self.activation_pspec(2, batch_size=batch_size)
+
     def logits_pspec(self, batch_size: int) -> P:
         """(B, V) decode logits: batch over the FSDP axes, vocab replicated
         (the lm head all-gathers; V is tiny traffic at decode batch sizes)."""

@@ -3,6 +3,7 @@ from repro.serve.engine import (  # noqa: F401
     ServeStats,
     generate,
     lockstep_generate,
+    make_chunk_step,
     make_decode_step,
     make_prefill_step,
 )

@@ -4,12 +4,16 @@ The production surface is :class:`PoolEngine` — a slot-pooled KV cache
 (one fixed ``max_slots x max_len`` cache built once via
 ``registry.init_pool_cache``) driven by a FIFO continuous-batching
 scheduler (serve/scheduler.py): queued requests are admitted into free
-slots mid-flight with a prefill-into-slot step, a single jitted
-fixed-shape decode step advances the whole pool with per-slot position
-indices, and slots retire on EOS / ``max_new_tokens`` and are refilled
-immediately.  Decode is weight-bound, so dead slots streaming weights for
-nothing is the dominant waste of the old lockstep loop —
-``benchmarks/servebench.py`` measures the recovered tokens/sec.
+slots mid-flight — via a solo prefill-into-slot step, or, with
+``prefill_chunk=C``, by streaming the prompt C tokens at a time through
+the same fused pooled step the decoding slots ride (chunked piggybacked
+prefill) — a single jitted fixed-shape step advances the whole pool with
+per-slot position indices, and slots retire on EOS / ``max_new_tokens``
+and are refilled immediately.  Decode is weight-bound, so dead slots
+streaming weights for nothing is the dominant waste of the old lockstep
+loop, and every solo admission prefill is an extra full weight pass —
+``benchmarks/servebench.py`` measures the recovered tokens/sec, weight
+passes, and per-request TTFT.
 
 The headline guarantee (docs/DESIGN_serving.md, enforced by
 tests/conformance/test_serve_batching.py): **batching policy never
@@ -118,6 +122,24 @@ def _decode_fn(cfg: ModelConfig, policy: QuantPolicy):
     return decode_step
 
 
+def _chunk_fn(cfg: ModelConfig, policy: QuantPolicy):
+    def chunk_step(params, tokens, n_new, cache):
+        logits, cache = registry.chunk_step(
+            cfg, policy, params, tokens, n_new, cache
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return chunk_step
+
+
+def _encxkv_fn(cfg: ModelConfig, policy: QuantPolicy):
+    def encxkv_step(params, frames):
+        return registry.encode_cross_kv(cfg, policy, params, frames)
+
+    return encxkv_step
+
+
 def _shared_step(kind: str, cfg, policy, body):
     """Cache-or-build a plan-less jitted step, enforcing at call time that
     the ambient actshard plan matches the one active at build time (it
@@ -197,6 +219,37 @@ def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *,
     )
 
 
+def make_chunk_step(cfg: ModelConfig, policy: QuantPolicy, *,
+                    plan: Optional[ShardingPlan] = None):
+    """The fused decode/prefill-chunk step (``registry.chunk_step``) for
+    chunked piggybacked prefill: one fixed-shape dispatch advances decode
+    slots by one token and prefilling slots by up to C prompt tokens.
+    The chunk width is carried by the call shapes (jit re-traces per
+    width), so the closure is shared exactly like the decode step's."""
+    chunk_step = _chunk_fn(cfg, policy)
+    if plan is None:
+        return _shared_step("chunk", cfg, policy, chunk_step)
+    b = _plan_batch(plan)
+    cache_sh = plan.cache_shardings()
+    tok_sh = plan.named(plan.token_pspec(b))
+    chunk_sh = plan.named(plan.chunk_pspec(b))
+    return jax.jit(
+        chunk_step,
+        in_shardings=(
+            plan.param_shardings(),
+            chunk_sh,
+            tok_sh,
+            cache_sh,
+        ),
+        out_shardings=(
+            tok_sh,
+            plan.named(plan.logits_pspec(b)),
+            cache_sh,
+        ),
+        donate_argnums=(3,),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Continuous-batching pool engine
 # ---------------------------------------------------------------------------
@@ -204,16 +257,34 @@ def make_decode_step(cfg: ModelConfig, policy: QuantPolicy, *,
 
 @dataclasses.dataclass
 class ServeStats:
-    """Host-side counters from one :meth:`PoolEngine.run`."""
+    """Host-side counters from one :meth:`PoolEngine.run`.
 
-    decode_steps: int = 0
-    prefills: int = 0
+    ``weight_passes`` is the deterministic cost/latency clock: decode is
+    weight-bound, so every full weight-streaming dispatch — a pooled
+    decode/chunk step, a solo admission prefill, an encdec encoder-side
+    admission — counts one pass regardless of batch composition.
+    ``ttft_passes[uid]`` measures a request's time-to-first-token on that
+    clock, from the first engine step at which it was admissible (queue
+    wait included).  Both are exactly reproducible for a fixed trace,
+    which is what lets CI gate them (benchmarks/compare.py).
+    """
+
+    decode_steps: int = 0  # pooled step dispatches (plain decode or fused chunk)
+    prefills: int = 0  # completed admissions
     emitted_tokens: int = 0
-    occupancy_sum: float = 0.0  # sum over decode steps of active/max_slots
+    occupancy_sum: float = 0.0  # sum over steps of occupied/max_slots
+    weight_passes: int = 0
+    ttft_passes: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
+
+    @property
+    def mean_ttft_passes(self) -> float:
+        if not self.ttft_passes:
+            return 0.0
+        return sum(self.ttft_passes.values()) / len(self.ttft_passes)
 
 
 class PoolEngine:
@@ -226,23 +297,50 @@ class PoolEngine:
     to serve raw weights (or a disabled policy, which never quantizes).
 
     The bit-identity guarantee holds for every family in
-    ``registry.POOLED_FAMILIES`` *except* MoE configs: expert-capacity
-    dispatch couples live tokens across slots (the capacity cap scales
-    with pool size and priority follows slot order), so MoE archs serve
-    correctly but are excluded from the bit-exact conformance matrix.
-    Retired slots ARE inert for MoE too — their rows are zeroed and
-    masked out of dispatch via the pool cache's per-slot ``active`` flag
-    (docs/DESIGN_serving.md).
+    ``registry.POOLED_FAMILIES``, MoE included: expert-capacity dispatch
+    runs per slot (``transformer._moe_apply(per_slot=True)``), so a
+    request's expert routing never depends on its pool neighbours — live
+    or retired (docs/DESIGN_serving.md §3).
+
+    ``prefill_chunk=C`` switches admission to **chunked piggybacked
+    prefill**: instead of a solo batch-1 prefill pass per admission (an
+    extra full weight-streaming pass that also recompiles per prompt
+    length), prompts are consumed C tokens per engine step by the same
+    fused fixed-shape ``registry.chunk_step`` that advances the decoding
+    slots — admission rides along with the pool.  Chunking is part of the
+    request's computation recipe (activation-scale groups cover a chunk,
+    not the whole prompt), so chunked output is *not* bit-identical to
+    solo-prefill output; what IS guaranteed — and pinned by the
+    conformance suite — is that batching still never changes a request's
+    tokens: pool output is bit-identical to the same request driven alone
+    through the same chunked steps.  Families outside
+    ``registry.CHUNKED_FAMILIES`` (ssm/hybrid: single-position
+    recurrences) and VLM requests with patch prefixes fall back to solo
+    prefill admission per request.
     """
 
     def __init__(self, cfg: ModelConfig, policy: QuantPolicy, params, *,
                  max_slots: int, max_len: int, cache_dtype=jnp.bfloat16,
                  prequantize: bool = True,
+                 prefill_chunk: Optional[int] = None,
                  plan: Optional[ShardingPlan] = None):
         if cfg.family not in registry.POOLED_FAMILIES:
             raise NotImplementedError(
                 f"PoolEngine: family {cfg.family!r} lacks per-slot decode"
             )
+        if prefill_chunk is not None:
+            if cfg.family not in registry.CHUNKED_FAMILIES:
+                raise NotImplementedError(
+                    f"prefill_chunk: family {cfg.family!r} has no fused "
+                    f"chunk step (supported: {registry.CHUNKED_FAMILIES})"
+                )
+            span = min(max_len, cfg.window) if cfg.window else max_len
+            if not 1 <= prefill_chunk <= span:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be in [1, "
+                    f"{span}] (the cache span) so a chunk's ring writes "
+                    "cannot collide"
+                )
         if prequantize and policy.enabled and not policy.weights_prequantized:
             from repro.serve import quantized_weights as qw
 
@@ -267,8 +365,14 @@ class PoolEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.prefill_chunk = prefill_chunk
         self.plan = plan
         self._decode = make_decode_step(cfg, policy, plan=plan)
+        self._chunk_step = (
+            make_chunk_step(cfg, policy, plan=plan)
+            if prefill_chunk is not None else None
+        )
+        self._encxkv = None  # built lazily inside run()'s plan context
         # batch-1 prefill-into-slot: plan-less jit (in-model activations
         # are pinned through the actshard context when a plan is active).
         # With a plan the step must be BUILT inside that context too (the
@@ -308,29 +412,47 @@ class PoolEngine:
         batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         logits, mini = self._prefill(self.params, batch, mini)
         tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
-        # the active mask is pool-only state — keep it out of the
-        # pool-vs-mini structural copy (copy-on-write: never mutate the
-        # caller's cache dict)
-        act = cache.get("active") if isinstance(cache, dict) else None
-        if act is not None:
-            cache = {k: v for k, v in cache.items() if k != "active"}
         cache = slots_lib.write_slot(cache, mini, slot)
-        if act is not None:
-            cache["active"] = act.at[slot].set(True)
         return cache, tok
 
-    @staticmethod
-    def _deactivate(cache, slot: int):
-        if isinstance(cache, dict) and "active" in cache:
+    def _chunkable(self, req: Request) -> bool:
+        """Chunked admission for this request?  VLM patch prefixes are
+        activations, not tokens — those requests solo-prefill even in a
+        chunked engine (family-level support was checked at init)."""
+        return (self.prefill_chunk is not None
+                and "patch_embeds" not in req.extras)
+
+    def _admit_chunked(self, cache, slot: int, req: Request):
+        """Chunked admission: rewind the slot's position bookkeeping; the
+        prompt then streams into the live pool cache via the fused chunk
+        steps.  encdec additionally runs the encoder side here (one
+        fixed-shape pass) and writes the slot's cross-attention K/V."""
+        cache = slots_lib.reset_slot(cache, slot)
+        if self.cfg.family == "encdec":
+            if self._encxkv is None:
+                self._encxkv = _shared_step(
+                    "encxkv", self.cfg, self.policy,
+                    _encxkv_fn(self.cfg, self.policy),
+                )
+            cks, cvs = self._encxkv(
+                self.params, jnp.asarray(req.extras["frames"])
+            )
             cache = dict(cache)
-            cache["active"] = cache["active"].at[slot].set(False)
+            cache["ck"] = jax.lax.dynamic_update_slice(
+                cache["ck"], cks.astype(cache["ck"].dtype), (0, slot, 0, 0, 0)
+            )
+            cache["cv"] = jax.lax.dynamic_update_slice(
+                cache["cv"], cvs.astype(cache["cv"].dtype), (0, slot, 0, 0, 0)
+            )
         return cache
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> Dict:
         """Drive all ``requests`` to completion; returns {uid: np.ndarray of
-        generated token ids}.  Host-side loop; the pooled decode step is a
-        single fixed-shape jitted dispatch per step."""
+        generated token ids}.  Host-side loop; the pooled step (plain
+        decode, or the fused decode+prefill-chunk step under
+        ``prefill_chunk``) is a single fixed-shape jitted dispatch per
+        step."""
         self._validate(requests)
         sched = FIFOScheduler(self.max_slots)
         for r in requests:
@@ -338,8 +460,28 @@ class PoolEngine:
         stats = ServeStats()
         out: Dict = {r.uid: [] for r in requests}
         remaining: Dict[int, int] = {}  # slot -> tokens still to emit
+        pending: Dict[int, np.ndarray] = {}  # slot -> unconsumed prompt
+        arrival_pass: Dict = {}  # uid -> weight_passes when first admissible
         last_tok = np.zeros((self.max_slots,), np.int32)
+        chunk = self.prefill_chunk
         step = 0
+
+        def stamp_arrivals():
+            for arr, uid in sched.pending_arrivals():
+                if arr <= step and uid not in arrival_pass:
+                    arrival_pass[uid] = stats.weight_passes
+
+        def first_token(slot, req, tok):
+            out[req.uid].append(tok)
+            last_tok[slot] = tok
+            stats.emitted_tokens += 1
+            stats.ttft_passes[req.uid] = (
+                stats.weight_passes - arrival_pass.get(req.uid,
+                                                       stats.weight_passes)
+            )
+            remaining[slot] = req.max_new_tokens - 1
+            if remaining[slot] <= 0 or tok == req.eos_id:
+                sched.retire(slot)
 
         ctx = (actshard.use_plan(self.plan) if self.plan is not None
                else contextlib.nullcontext())
@@ -350,18 +492,24 @@ class PoolEngine:
                 self.cfg, self.max_slots, self.max_len, self.cache_dtype
             )
             while not sched.all_done():
+                stamp_arrivals()
                 for slot, req in sched.admit(step):
-                    cache, tok = self._prefill_into(cache, slot, req)
-                    stats.prefills += 1
-                    stats.emitted_tokens += 1
-                    out[req.uid].append(tok)
-                    last_tok[slot] = tok
-                    remaining[slot] = req.max_new_tokens - 1
-                    if remaining[slot] <= 0 or tok == req.eos_id:
-                        sched.retire(slot)
-                        cache = self._deactivate(cache, slot)
+                    if self._chunkable(req):
+                        cache = self._admit_chunked(cache, slot, req)
+                        if self.cfg.family == "encdec":
+                            stats.weight_passes += 1  # encoder-side pass
+                        sched.mark_prefilling(slot)
+                        pending[slot] = np.asarray(
+                            req.tokens, np.int32
+                        ).reshape(-1)
+                    else:
+                        cache, tok = self._prefill_into(cache, slot, req)
+                        stats.prefills += 1
+                        stats.weight_passes += 1
+                        first_token(slot, req, tok)
                 active = sched.active_slots()
-                if not active:
+                prefilling = sched.prefilling_slots()
+                if not active and not prefilling:
                     # Fast-forward the clock to the next arrival instead of
                     # spinning empty decode steps.
                     nxt = sched.next_arrival()
@@ -369,12 +517,40 @@ class PoolEngine:
                         break
                     step = max(step + 1, nxt)
                     continue
-                ntok, _, cache = self._decode(
-                    self.params, jnp.asarray(last_tok), cache
-                )
+                finishing = []
+                if chunk is None:
+                    ntok, _, cache = self._decode(
+                        self.params, jnp.asarray(last_tok), cache
+                    )
+                else:
+                    tokens = np.zeros((self.max_slots, chunk), np.int32)
+                    n_new = np.zeros((self.max_slots,), np.int32)
+                    for slot in active:
+                        tokens[slot, 0] = last_tok[slot]
+                        n_new[slot] = 1
+                    for slot in prefilling:
+                        buf = pending[slot]
+                        take = min(chunk, len(buf))
+                        tokens[slot, :take] = buf[:take]
+                        n_new[slot] = take
+                        pending[slot] = buf[take:]
+                        if take == len(buf):
+                            finishing.append(slot)
+                    ntok, _, cache = self._chunk_step(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(n_new), cache,
+                    )
                 ntok_host = np.asarray(ntok)
                 stats.decode_steps += 1
-                stats.occupancy_sum += len(active) / self.max_slots
+                stats.weight_passes += 1
+                stats.occupancy_sum += (
+                    (len(active) + len(prefilling)) / self.max_slots
+                )
+                for slot in finishing:
+                    sched.finish_prefill(slot)
+                    stats.prefills += 1
+                    first_token(slot, sched.active_request(slot),
+                                int(ntok_host[slot]))
                 for slot in active:
                     req = sched.active_request(slot)
                     tok = int(ntok_host[slot])
@@ -384,7 +560,6 @@ class PoolEngine:
                     remaining[slot] -= 1
                     if remaining[slot] <= 0 or tok == req.eos_id:
                         sched.retire(slot)
-                        cache = self._deactivate(cache, slot)
                 sched.check_conservation()
                 step += 1
         self.last_stats = stats
@@ -416,9 +591,11 @@ def generate(
     batch (unlike :func:`lockstep_generate`, the pre-pool behaviour).
     Returns (B, max_new_tokens) int32.
 
-    Families without per-slot decode (``hybrid``), and legacy plans built
-    without ``pool_slots``, fall back to :func:`lockstep_generate` — the
-    exact pre-pool behaviour those callers always had.
+    Families without per-slot decode, and legacy plans built without
+    ``pool_slots``, fall back to :func:`lockstep_generate` — the exact
+    pre-pool behaviour those callers always had.  (Since PR 5 every
+    decode family pools — hybrid included — so the family fallback only
+    guards hypothetical future families.)
 
     Each call with a pool plan builds (and re-jits) a fresh engine; a
     sharded caller generating repeatedly should construct one

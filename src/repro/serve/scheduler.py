@@ -4,12 +4,21 @@ State machine per request (tests/test_scheduler.py pins the invariants):
 
     QUEUED --admit(now)--> ACTIVE(slot) --retire(slot)--> DONE
 
+With chunked piggybacked prefill (serve/engine.py ``prefill_chunk``) a
+slot additionally passes through a PREFILLING sub-state of ACTIVE —
+assigned, but still consuming prompt chunks rather than emitting tokens:
+
+    QUEUED --admit--> ACTIVE(slot)
+                        --mark_prefilling--> PREFILLING(slot)
+                        --finish_prefill--> DECODING(slot) --retire--> DONE
+
 * FIFO fairness: requests are admitted in (arrival, submit-order) order —
   the head of the queue can never be overtaken, so no request starves.
 * A slot holds at most one request; ``admit`` only hands out free slots
   and never more than ``max_slots`` are active at once.
 * Every admitted request is retired exactly once (double retires raise).
-* Conservation: queued + active + done == submitted, at every step.
+* Conservation: queued + active + done == submitted, at every step
+  (PREFILLING counts as active — the slot is occupied).
 
 The scheduler owns no arrays and never touches the model: the engine
 (serve/engine.py) asks it *which* request goes into *which* slot and
@@ -61,6 +70,7 @@ class FIFOScheduler:
         self._free: List[int] = list(range(max_slots))  # min-heap of slots
         heapq.heapify(self._free)
         self._active: Dict[int, Request] = {}
+        self._prefilling: set = set()  # slots of _active still in prefill
         self._done: List[Request] = []
         self._submitted = 0
 
@@ -93,9 +103,25 @@ class FIFOScheduler:
         if slot not in self._active:
             raise SchedulerError(f"retire of non-active slot {slot}")
         req = self._active.pop(slot)
+        self._prefilling.discard(slot)
         self._done.append(req)
         heapq.heappush(self._free, slot)
         return req
+
+    # -- chunked-prefill sub-state ------------------------------------------
+    def mark_prefilling(self, slot: int) -> None:
+        """Flag a just-admitted slot as consuming prompt chunks (chunked
+        piggybacked prefill): it occupies the slot but emits no tokens
+        until ``finish_prefill``."""
+        if slot not in self._active:
+            raise SchedulerError(f"mark_prefilling of non-active slot {slot}")
+        self._prefilling.add(slot)
+
+    def finish_prefill(self, slot: int) -> None:
+        """Transition PREFILLING -> DECODING (exactly once per admission)."""
+        if slot not in self._prefilling:
+            raise SchedulerError(f"finish_prefill of non-prefilling slot {slot}")
+        self._prefilling.discard(slot)
 
     # -- introspection -----------------------------------------------------
     @property
@@ -114,8 +140,17 @@ class FIFOScheduler:
     def num_submitted(self) -> int:
         return self._submitted
 
+    @property
+    def num_prefilling(self) -> int:
+        return len(self._prefilling)
+
     def active_slots(self) -> List[int]:
-        return sorted(self._active)
+        """Slots currently DECODING (prefilling slots are excluded — they
+        occupy a slot but emit no tokens yet)."""
+        return sorted(s for s in self._active if s not in self._prefilling)
+
+    def prefilling_slots(self) -> List[int]:
+        return sorted(self._prefilling)
 
     def active_request(self, slot: int) -> Request:
         return self._active[slot]
@@ -123,6 +158,10 @@ class FIFOScheduler:
     def next_arrival(self) -> Optional[int]:
         """Arrival step of the queue head (None when the queue is empty)."""
         return self._queue[0][0] if self._queue else None
+
+    def pending_arrivals(self) -> List[Tuple[int, Any]]:
+        """(arrival, uid) of every still-queued request (unordered)."""
+        return [(a, r.uid) for a, _, r in self._queue]
 
     def all_done(self) -> bool:
         return not self._queue and not self._active

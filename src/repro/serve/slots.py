@@ -18,12 +18,14 @@ path and the pool.  Admitting a request is pure data movement:
 Retired slots are NOT cleared: a dead slot keeps decoding garbage into
 its own row (rows never mix — every matmul / softmax / quantization
 reduction in the decode step is row-local under
-``policy.per_sample_act_scales``), and the next ``write_slot`` overwrites
-the row wholesale.  The one cross-row computation is MoE expert-capacity
-dispatch: those pool caches carry a per-slot ``active`` flag
-(``registry.init_pool_cache``) that zeroes dead rows and masks them out
-of the dispatch cumsum, so garbage can never claim expert capacity from
-live requests.
+``policy.per_sample_act_scales``, and MoE expert-capacity dispatch runs
+per slot), and the next ``write_slot`` overwrites the row wholesale.
+
+Chunked piggybacked prefill (serve/engine.py ``prefill_chunk``) skips the
+batch-1 prefill + ``write_slot`` copy entirely: ``reset_slot`` rewinds a
+slot's position bookkeeping (``len`` -> 0, ``pos`` rows -> -1) and the
+prompt is then streamed into the live pool cache by the fused
+``registry.chunk_step`` itself.
 """
 from __future__ import annotations
 
@@ -44,6 +46,24 @@ def lift_cache(cache, max_slots: int):
         return x
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def reset_slot(pool, slot: int):
+    """Rewind row ``slot`` of a pool cache for chunked-prefill admission:
+    per-slot ``len`` back to 0 and every lifted ``pos`` row to -1 (the
+    not-yet-written sentinel the attention mask keys on).  K/V / state
+    rows are left as-is — with ``pos`` rewound they are unreachable, and
+    the chunk steps overwrite them position by position."""
+
+    def one(path, x):
+        key = str(getattr(path[-1], "key", "")) if path else ""
+        if key == "len":
+            return x.at[slot].set(0)
+        if key == "pos":
+            return x.at[slot].set(-1)
+        return x
+
+    return jax.tree_util.tree_map_with_path(one, pool)
 
 
 def write_slot(pool, mini, slot: int):

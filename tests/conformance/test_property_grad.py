@@ -10,6 +10,7 @@ Pallas path.  Degrades to skips when the optional ``hypothesis`` dev dep
 is missing (it is installed in CI).
 """
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 hnp = pytest.importorskip("hypothesis.extra.numpy")
 st = pytest.importorskip("hypothesis.strategies")
+
+# nightly workflow raises the example budget via this multiplier
+_SCALE = max(1, int(os.environ.get("REPRO_HYPOTHESIS_SCALE", "1")))
 
 from repro.core import mfmac, potq
 from repro.core.policy import ABLATION_NO_PRC, PAPER_FAITHFUL
@@ -50,7 +54,7 @@ def _with_anchor(f):
 
 
 @hypothesis.given(FULL_F32, BITS, BITS, st.booleans())
-@hypothesis.settings(deadline=None, max_examples=80)
+@hypothesis.settings(deadline=None, max_examples=80 * _SCALE)
 def test_quantize_g_selects_bits_and_matches_potq(f, bits_g, bits_g_last,
                                                   is_last):
     """_quantize_g == pot_quantize at the policy-selected bit-width
@@ -84,7 +88,7 @@ BOUNDED_F32 = hnp.arrays(
 
 
 @hypothesis.given(BOUNDED_F32, BITS)
-@hypothesis.settings(deadline=None, max_examples=80)
+@hypothesis.settings(deadline=None, max_examples=80 * _SCALE)
 def test_quantize_g_idempotent(f, bits):
     """Re-quantizing a quantized gradient is the identity: the PoT grid is
     closed and the layer-wise beta is reproduced from the quantized max.

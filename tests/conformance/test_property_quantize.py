@@ -4,7 +4,12 @@ Generalizes the deterministic grid of test_quantizer_paths.py to arbitrary
 f32 tensors — subnormals included — and to the kernel's determinism
 contract (tiling invariance on random inputs).  Degrades to skips when the
 optional ``hypothesis`` dev dep is missing (it is installed in CI).
+
+The nightly workflow raises every suite's example budget via
+``REPRO_HYPOTHESIS_SCALE`` (a multiplier on ``max_examples``).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +20,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 hnp = pytest.importorskip("hypothesis.extra.numpy")
 st = pytest.importorskip("hypothesis.strategies")
+
+_SCALE = max(1, int(os.environ.get("REPRO_HYPOTHESIS_SCALE", "1")))
 
 from repro.core import potq
 from repro.kernels import ops, ref
@@ -34,7 +41,7 @@ BITS = st.sampled_from([4, 5, 6])
 
 
 @hypothesis.given(FULL_F32, BITS)
-@hypothesis.settings(deadline=None, max_examples=80)
+@hypothesis.settings(deadline=None, max_examples=80 * _SCALE)
 def test_tile_quantizer_equals_core_potq(f, bits):
     """_quantize_tile (the kernel body's quantizer) == pot_quantize with
     beta=0, bit for bit, over the whole f32 domain incl. subnormals."""
@@ -47,7 +54,7 @@ def test_tile_quantizer_equals_core_potq(f, bits):
 
 
 @hypothesis.given(FULL_F32, BITS)
-@hypothesis.settings(deadline=None, max_examples=80)
+@hypothesis.settings(deadline=None, max_examples=80 * _SCALE)
 def test_tile_quantizer_equals_ref_oracle(f, bits):
     emax = potq.pot_emax(bits)
     x = jnp.asarray(f)
@@ -68,7 +75,7 @@ def test_tile_quantizer_equals_ref_oracle(f, bits):
     ),
     st.sampled_from([(8, 128, 128), (16, 128, 256), (32, 128, 128)]),
 )
-@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.settings(deadline=None, max_examples=10 * _SCALE)
 def test_kernel_tiling_invariance_on_random_inputs(a, w, tiling):
     """Property form of the determinism contract: ANY input, ANY tiling,
     same bits as the canonical-order oracle."""

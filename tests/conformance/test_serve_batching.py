@@ -14,8 +14,17 @@ PoT-prequantized weights (its default) — so a match certifies, in one
 assert: per-slot == scalar positions, per-sample == per-tensor scales at
 batch 1, and ``quantize_for_serving`` idempotence under the pool path.
 
-Matrix: >=3 arrival schedules x >=2 slot counts x {transformer, encdec}
-x {jnp, pallas} kernel paths.
+Matrix: >=3 arrival schedules x >=2 slot counts x {transformer, encdec,
+hybrid} x {jnp, pallas} kernel paths, plus MoE (per-slot expert
+dispatch), ssm, EOS-prefix, and chunked piggybacked prefill.
+
+Chunked prefill (``PoolEngine(prefill_chunk=C)``) changes the
+computation *recipe* — activation-scale groups cover a chunk, not the
+whole prompt — so its reference is the same recipe driven solo: raw
+``registry.chunk_step`` calls at batch 1 (per-tensor scales,
+quantize-at-use weights), mirroring the engine's chunking of the prompt.
+The invariant under test is unchanged: batching never changes a
+request's tokens.
 """
 import dataclasses
 
@@ -119,8 +128,13 @@ def _run_pool(case, slots, schedule):
 
 @pytest.mark.parametrize("slots", SLOT_COUNTS)
 @pytest.mark.parametrize("schedule", sorted(SCHEDULES))
-@pytest.mark.parametrize("arch", ["llama3-8b", "whisper-large-v3"])
+@pytest.mark.parametrize(
+    "arch", ["llama3-8b", "whisper-large-v3", "recurrentgemma-2b"]
+)
 def test_pool_bit_identical_to_solo(arch, schedule, slots):
+    """recurrentgemma (hybrid) joined the matrix in PR 5: its attention
+    layers now carry per-slot positions like transformer/encdec, and the
+    RG-LRU conv/lru states are per-row by construction."""
     out, solo = _run_pool(_case(arch), slots, schedule)
     for uid, ref in solo.items():
         np.testing.assert_array_equal(
@@ -130,12 +144,29 @@ def test_pool_bit_identical_to_solo(arch, schedule, slots):
 
 
 @pytest.mark.parametrize("schedule", ["all_at_once", "staggered"])
-def test_pool_bit_identical_pallas(schedule):
+@pytest.mark.parametrize("arch", ["llama3-8b", "recurrentgemma-2b"])
+def test_pool_bit_identical_pallas(arch, schedule):
     """Same invariant through the fused Pallas kernels (interpret mode on
     CPU) — the tiling-invariant, row-independent reduction is exactly what
     makes the guarantee hold on the kernel path too."""
     out, solo = _run_pool(
-        _case("llama3-8b", use_pallas=True, n=3), 2, schedule
+        _case(arch, use_pallas=True, n=3), 2, schedule
+    )
+    for uid, ref in solo.items():
+        np.testing.assert_array_equal(out[uid], ref, err_msg=f"uid={uid}")
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("schedule", ["all_at_once", "staggered"])
+def test_pool_bit_identical_moe(schedule, use_pallas):
+    """MoE joined the bit-exact matrix in PR 5: expert-capacity dispatch
+    and expert activation-scale groups both run per slot
+    (``transformer._moe_apply(per_slot=True)``), so neither live nor
+    retired neighbours can perturb a request's routing or quantization."""
+    n = 2 if use_pallas else 3
+    out, solo = _run_pool(
+        _case("llama4-scout-17b-a16e", use_pallas=use_pallas, n=n),
+        2, schedule,
     )
     for uid, ref in solo.items():
         np.testing.assert_array_equal(out[uid], ref, err_msg=f"uid={uid}")
@@ -168,11 +199,11 @@ def test_generate_rows_are_batch_independent():
         )
 
 
-def test_moe_dead_slots_are_inert():
-    """MoE expert-capacity dispatch couples pool slots, so retired slots'
-    garbage rows are zeroed and masked out of the dispatch cumsum (the
-    pool cache's per-slot ``active`` flag): a live request's tokens must
-    not change when a neighbouring slot dies and rots."""
+def test_moe_dead_and_live_slots_bit_identical():
+    """Upgraded from PR 4's 'retired slots are inert': per-slot expert
+    dispatch makes MoE fully batch-invariant, so a live request's tokens
+    equal its raw solo reference whether it runs alone, next to a live
+    neighbour, or next to a retired slot rotting garbage into its row."""
     cfg, params = _params_for("llama4-scout-17b-a16e")
     assert cfg.moe is not None
     rng = np.random.default_rng(11)
@@ -184,10 +215,184 @@ def test_moe_dead_slots_are_inert():
         uid="brief", tokens=rng.integers(0, cfg.vocab, (1, 4)).astype(np.int32),
         max_new_tokens=1,
     )
+    solo_live = _solo_reference(cfg, PAPER_FAITHFUL, params, live)
     eng = PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2, max_len=MAX_LEN)
     alone = eng.run([live])["live"]
     with_dead_neighbour = eng.run([brief, live])["live"]
-    np.testing.assert_array_equal(alone, with_dead_neighbour)
+    np.testing.assert_array_equal(alone, solo_live)
+    np.testing.assert_array_equal(with_dead_neighbour, solo_live)
+
+
+# ---------------------------------------------------------------------------
+# Chunked piggybacked prefill
+# ---------------------------------------------------------------------------
+
+CHUNK = 4
+
+#: jitted raw chunk-step per (cfg, policy) for the solo references
+_CHUNK_FNS = {}
+
+
+def _chunk_fn(cfg, policy):
+    key = (cfg, policy)
+    if key not in _CHUNK_FNS:
+        _CHUNK_FNS[key] = jax.jit(
+            lambda p, t, n, c: registry.chunk_step(cfg, policy, p, t, n, c)
+        )
+    return _CHUNK_FNS[key]
+
+
+def _solo_chunked_reference(cfg, policy, params, req, chunk=CHUNK):
+    """Batch-1 chunked loop: raw ``registry.chunk_step`` calls on a
+    one-slot pool cache with quantize-at-use weights and per-tensor
+    activation scales — the chunk-recipe analogue of ``_solo_reference``
+    (the engine instead runs prequantized weights + per-sample scales
+    inside a shared pool, so a match certifies the same three properties).
+    """
+    step = _chunk_fn(cfg, policy)
+    cache = registry.init_pool_cache(cfg, 1, MAX_LEN)
+    if cfg.family == "encdec":
+        cks, cvs = registry.encode_cross_kv(
+            cfg, policy, params, jnp.asarray(req.extras["frames"])
+        )
+        cache = dict(cache)
+        cache["ck"] = cks.astype(cache["ck"].dtype)
+        cache["cv"] = cvs.astype(cache["cv"].dtype)
+    buf = np.asarray(req.tokens, np.int32).reshape(-1)
+    logits = None
+    while len(buf):
+        take = int(min(chunk, len(buf)))
+        tokens = np.zeros((1, chunk), np.int32)
+        tokens[0, :take] = buf[:take]
+        buf = buf[take:]
+        logits, cache = step(
+            params, jnp.asarray(tokens), jnp.asarray([take], jnp.int32), cache
+        )
+    tok = int(jnp.argmax(logits, -1)[0])
+    out = [tok]
+    one = jnp.asarray([1], jnp.int32)
+    for _ in range(req.max_new_tokens - 1):
+        dec = np.zeros((1, chunk), np.int32)
+        dec[0, 0] = tok
+        logits, cache = step(params, jnp.asarray(dec), one, cache)
+        tok = int(jnp.argmax(logits, -1)[0])
+        out.append(tok)
+    return np.asarray(out, np.int32)
+
+
+# memoized solo-chunked refs + engines, like _CACHE above
+_CHUNK_CACHE = {}
+
+
+def _run_chunked(arch, schedule, *, use_pallas=False, n=4, slots=2,
+                 chunk=CHUNK):
+    key = (arch, use_pallas, n, chunk)
+    if key not in _CHUNK_CACHE:
+        cfg, params = _params_for(arch)
+        policy = PALLAS if use_pallas else PAPER_FAITHFUL
+        reqs = _requests(cfg, n, seed=31 + len(arch))
+        solo = {
+            r.uid: _solo_chunked_reference(cfg, policy, params, r, chunk)
+            for r in reqs
+        }
+        _CHUNK_CACHE[key] = (cfg, policy, params, reqs, solo, {})
+    cfg, policy, params, reqs, solo, engines = _CHUNK_CACHE[key]
+    if slots not in engines:
+        engines[slots] = PoolEngine(
+            cfg, policy, params, max_slots=slots, max_len=MAX_LEN,
+            prefill_chunk=chunk,
+        )
+    arrivals = SCHEDULES[schedule](len(reqs))
+    scheduled = [
+        dataclasses.replace(r, arrival=a) for r, a in zip(reqs, arrivals)
+    ]
+    out = engines[slots].run(scheduled)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.uid], solo[r.uid],
+            err_msg=f"{arch} uid={r.uid} schedule={schedule} chunk={chunk}",
+        )
+    return engines[slots]
+
+
+@pytest.mark.parametrize("schedule", ["staggered", "burst_then_tail"])
+def test_chunked_prefill_bit_identical(schedule):
+    """Mid-flight chunked-prefill admission: requests arriving while
+    neighbours decode stream their prompts through the fused chunk step
+    C tokens per pooled dispatch; every request's tokens bit-equal the
+    same chunked recipe run alone."""
+    _run_chunked("llama3-8b", schedule)
+
+
+@pytest.mark.parametrize("schedule", ["staggered", "burst_then_tail"])
+def test_chunked_prefill_bit_identical_pallas(schedule):
+    """Chunked admission through the fused Pallas kernels (interpret
+    mode): padded chunk rows are separate matmul rows of the
+    tiling-invariant reduction, so the guarantee carries over."""
+    _run_chunked("llama3-8b", schedule, use_pallas=True, n=3)
+
+
+def test_chunked_prefill_encdec():
+    """encdec chunked admission = one encoder-side pass (cross K/V into
+    the slot) + piggybacked decoder-prompt chunks."""
+    _run_chunked("whisper-large-v3", "staggered", n=3)
+
+
+def test_chunked_prefill_ring_window():
+    """Windowed arch: a chunk's ring writes can wrap; attending over
+    [old cache ∪ fresh chunk] keeps earlier in-chunk queries' windows
+    intact (prompts up to 9 > window 8 wrap during prefill)."""
+    _run_chunked("mistral-nemo-12b", "staggered", n=3)
+
+
+def test_chunk_step_pad_rows_ignore_stale_cache():
+    """Slot reuse: a pad query's mask is all-False, so its softmax
+    degenerates to a uniform average over EVERY key — including whatever
+    junk the slot's previous occupant left in K/V (``reset_slot`` only
+    rewinds ``pos``/``len``).  chunk_step zeroes pad attention rows, so
+    logits at the valid positions must be bitwise identical between a
+    fresh-zero cache and one whose K/V rows hold huge stale values."""
+    from repro.serve import slots as slots_lib
+
+    cfg, params = _params_for("llama3-8b")
+    tokens = np.zeros((1, CHUNK), np.int32)
+    tokens[0, :3] = [5, 7, 9]
+    n_new = jnp.asarray([3], jnp.int32)
+    fresh = registry.init_pool_cache(cfg, 1, MAX_LEN)
+    junk = jax.tree_util.tree_map(
+        lambda x: (jnp.full_like(x, 1e4)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x),
+        fresh,
+    )
+    junk = slots_lib.reset_slot(junk, 0)
+    lg_fresh, c_fresh = registry.chunk_step(
+        cfg, PAPER_FAITHFUL, params, jnp.asarray(tokens), n_new, fresh
+    )
+    lg_junk, c_junk = registry.chunk_step(
+        cfg, PAPER_FAITHFUL, params, jnp.asarray(tokens), n_new, junk
+    )
+    np.testing.assert_array_equal(np.asarray(lg_fresh), np.asarray(lg_junk))
+    # and one decode-shaped step (1 valid token + C-1 pads) on top
+    dec = np.zeros((1, CHUNK), np.int32)
+    dec[0, 0] = int(jnp.argmax(lg_fresh, -1)[0])
+    one = jnp.asarray([1], jnp.int32)
+    lg2_fresh, _ = registry.chunk_step(
+        cfg, PAPER_FAITHFUL, params, jnp.asarray(dec), one, c_fresh
+    )
+    lg2_junk, _ = registry.chunk_step(
+        cfg, PAPER_FAITHFUL, params, jnp.asarray(dec), one, c_junk
+    )
+    np.testing.assert_array_equal(np.asarray(lg2_fresh), np.asarray(lg2_junk))
+
+
+def test_chunked_prefill_single_chunk_covers_prompt():
+    """chunk >= prompt length: admission costs zero extra weight passes
+    (the whole prompt rides one fused step) and TTFT on the weight-pass
+    clock is 1 for an uncontended slot."""
+    eng = _run_chunked("llama3-8b", "staggered", n=3, chunk=9)
+    st = eng.last_stats
+    assert st.weight_passes == st.decode_steps  # no solo admission passes
+    assert min(st.ttft_passes.values()) == 1
 
 
 def test_eos_early_retire_is_solo_prefix():

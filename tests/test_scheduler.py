@@ -70,6 +70,54 @@ def test_conservation_and_all_done():
     assert s.num_done == 3 and s.num_queued == 0 and s.num_active == 0
 
 
+def test_prefilling_substate():
+    """Chunked prefill: a PREFILLING slot is occupied (conservation,
+    capacity) but excluded from active_slots() until finish_prefill."""
+    s = FIFOScheduler(2)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    s.submit(_req(2))
+    (s0, _), (s1, _) = s.admit(now=0)
+    s.mark_prefilling(s0)
+    assert s.prefilling_slots() == [s0]
+    assert s.active_slots() == [s1]
+    assert s.num_prefilling == 1 and s.num_active == 2
+    assert s.admit(now=0) == []  # prefilling slot still occupies capacity
+    s.check_conservation()
+    s.finish_prefill(s0)
+    assert s.prefilling_slots() == [] and sorted(s.active_slots()) == [s0, s1]
+    with pytest.raises(SchedulerError):  # exactly once per admission
+        s.finish_prefill(s0)
+    with pytest.raises(SchedulerError):  # only assigned slots can prefill
+        s.mark_prefilling(7)
+
+
+def test_prefilling_retire_and_reuse():
+    """Retiring straight out of PREFILLING (engine-level cancel) frees the
+    slot and clears the sub-state for the next occupant."""
+    s = FIFOScheduler(1)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    [(slot, _)] = s.admit(now=0)
+    s.mark_prefilling(slot)
+    s.retire(slot)
+    s.check_conservation()
+    [(slot2, r2)] = s.admit(now=0)
+    assert slot2 == slot and r2.uid == 1
+    assert s.prefilling_slots() == []  # sub-state did not leak
+    s.retire(slot2)
+    assert s.all_done()
+
+
+def test_pending_arrivals_snapshot():
+    s = FIFOScheduler(1)
+    s.submit(_req("a", arrival=3))
+    s.submit(_req("b", arrival=1))
+    assert sorted(s.pending_arrivals()) == [(1, "b"), (3, "a")]
+    s.admit(now=1)
+    assert s.pending_arrivals() == [(3, "a")]
+
+
 # ---------------------------------------------------------------------------
 # property tests: randomized traces through a simulated engine loop.
 # hypothesis is an optional dev dep (requirements-dev.txt; installed in
@@ -81,6 +129,9 @@ try:
     import hypothesis.strategies as st
 except ImportError:  # degrade to the deterministic sweep only
     hypothesis = None
+
+# nightly workflow raises the example budget via this multiplier
+_SCALE = max(1, int(__import__("os").environ.get("REPRO_HYPOTHESIS_SCALE", "1")))
 
 
 def _drive(max_slots, trace):
@@ -160,6 +211,6 @@ if hypothesis is not None:
             min_size=0, max_size=24,
         ),
     )
-    @hypothesis.settings(deadline=None, max_examples=60)
+    @hypothesis.settings(deadline=None, max_examples=60 * _SCALE)
     def test_scheduler_invariants(max_slots, trace):
         _drive(max_slots, trace)
