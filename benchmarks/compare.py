@@ -15,9 +15,13 @@ servebench (exactly reproducible for the fixed smoke trace):
   - weight passes (every full weight-streaming dispatch, admissions
     included — the chunked-prefill win lives here)
   - mean time-to-first-token in weight passes (admission latency)
+  - live paged-KV HBM bytes per emitted token, the prefix-cache hit
+    rate, and the weight passes saved by prefix sharing on the
+    shared-system-prompt trace (PR 6 paged counters)
   It also re-asserts the cross-engine invariants (pool < lockstep steps;
-  chunked < solo-prefill passes and TTFT), so a regression can't slip in
-  by moving baseline and current together.
+  chunked < solo-prefill passes and TTFT; small pages < page=span KV
+  bytes/token; prefix sharing < unshared passes and TTFT), so a
+  regression can't slip in by moving baseline and current together.
 
 kernelbench (dimensionless, machine-normalized):
   - ``speedup_x`` of the ``potq_grad_fused_*`` rows (fused-vs-composed
@@ -52,13 +56,23 @@ SERVE_COUNTERS = [
     ("pool_chunked.decode_steps", True),
     ("pool_chunked.weight_passes", True),
     ("pool_chunked.mean_ttft_passes", True),
+    ("pool_chunked.kv_hbm_bytes_per_token", True),
+    ("pool_paged.weight_passes", True),
+    ("pool_paged.mean_ttft_passes", True),
+    ("pool_paged.kv_hbm_bytes_per_token", True),
     ("lockstep.decode_steps", True),
+    ("prefix_on.weight_passes", True),
+    ("prefix_on.mean_ttft_passes", True),
+    ("prefix_on.kv_hbm_bytes_per_token", True),
+    ("prefix_on.prefix_hit_rate", False),
+    ("prefix_weight_passes_saved", False),
 ]
 
 #: wall-clock servebench fields (higher is better) — warn only
 SERVE_WALLCLOCK = [
     "pool.tokens_per_s",
     "pool_chunked.tokens_per_s",
+    "pool_paged.tokens_per_s",
     "lockstep.tokens_per_s",
     "speedup_tokens_per_s",
 ]
@@ -72,7 +86,8 @@ def _get(d, path):
 
 def compare_servebench(base, cur, tol):
     failures, warnings = [], []
-    setup = ("trace", "requests", "slots", "prefill_chunk")
+    setup = ("trace", "prefix_trace", "requests", "slots", "prefill_chunk",
+             "page_size")
     if any(base.get(k) != cur.get(k) for k in setup):
         failures.append(
             "servebench setup mismatch: baseline and current ran different "
@@ -105,6 +120,24 @@ def compare_servebench(base, cur, tol):
         failures.append(
             "servebench: chunked prefill no longer reduces mean TTFT "
             "vs solo-prefill admission"
+        )
+    if (_get(cur, "pool_paged.kv_hbm_bytes_per_token")
+            >= _get(cur, "pool_chunked.kv_hbm_bytes_per_token")):
+        failures.append(
+            "servebench: small pages no longer shrink the live KV HBM "
+            "footprint per token vs the page=span geometry"
+        )
+    if (_get(cur, "prefix_on.weight_passes")
+            >= _get(cur, "prefix_off.weight_passes")):
+        failures.append(
+            "servebench: prefix sharing no longer reduces weight passes "
+            "on the shared-system-prompt trace"
+        )
+    if (_get(cur, "prefix_on.mean_ttft_passes")
+            >= _get(cur, "prefix_off.mean_ttft_passes")):
+        failures.append(
+            "servebench: prefix sharing no longer reduces mean TTFT "
+            "on the shared-system-prompt trace"
         )
     for path in SERVE_WALLCLOCK:
         b, c = float(_get(base, path)), float(_get(cur, path))

@@ -1,7 +1,7 @@
 """Serving throughput: continuous-batching pool vs lockstep, same trace.
 
 Replays one Poisson-arrival request trace with mixed output lengths
-through three engines:
+through four engines:
 
 * ``pool`` — serve.PoolEngine: slot-pooled KV cache, FIFO continuous
   batching, slots retire on completion and refill immediately; admission
@@ -11,10 +11,22 @@ through three engines:
   pooled step (``registry.chunk_step``), so admitting a request costs no
   extra weight-streaming pass and a burst of arrivals prefills in
   parallel slots instead of serializing solo passes.
+* ``pool_paged`` — the chunked engine with small KV pages
+  (``--page-size``): same tokens, same weight passes, but retired slots
+  free page-granular memory immediately, so the mean live KV HBM
+  footprint per emitted token drops vs the page=span geometry.
 * ``lockstep`` — serve.lockstep_generate in waves of ``--slots`` requests:
   a wave prefills together once its last member has arrived and decodes
   to the wave's **max** output length — dead slots keep streaming every
   weight (decode is weight-bound, so wasted steps are wasted bandwidth).
+
+A second, shared-system-prompt trace (``serve.shared_prefix_trace``:
+one fixed prompt head + per-request suffixes) replays through the paged
+chunked engine with the prefix cache off (``prefix_off``) and on
+(``prefix_on``): later admissions map the head's pages instead of
+re-streaming them, so ``prefix_on`` must show strictly fewer weight
+passes and lower mean TTFT at a nonzero ``prefix_hit_rate`` — all
+deterministic, all gated.
 
 Deterministic metrics (exactly reproducible for a fixed trace — the CI
 gate, compared against the committed ``BENCH_servebench.json`` baseline
@@ -28,6 +40,12 @@ by ``benchmarks/compare.py``):
 * ``ttft_passes`` — per-request time-to-first-token on the weight-pass
   clock, queue wait included.  Gating TTFT (not just total steps) means a
   prefill-path regression cannot hide behind a flat decode-step count.
+* ``kv_hbm_bytes_per_token`` — mean live paged-KV HBM footprint per
+  emitted token (pages-in-use integrated over steps x page bytes /
+  tokens).  This is what small pages buy: page-granular freeing.
+* ``prefix_hit_rate`` / ``prefix_weight_passes_saved`` — fraction of
+  prompt tokens served from shared prefix pages, and the whole
+  weight-streaming passes that sharing removed vs the unshared run.
 
 Wall-clock tokens/sec is reported but only warned on (shared CI runners
 are noisy).
@@ -48,13 +66,17 @@ import jax.numpy as jnp
 from repro import configs as C
 from repro.core.policy import PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
-from repro.serve import PoolEngine, lockstep_generate, poisson_trace
+from repro.serve import (
+    PoolEngine, lockstep_generate, poisson_trace, shared_prefix_trace,
+)
 
 
-def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None):
+def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
+             page_size=None, prefix_cache=False):
     eng = PoolEngine(
         cfg, PAPER_FAITHFUL, params, max_slots=slots, max_len=max_len,
-        prefill_chunk=prefill_chunk,
+        prefill_chunk=prefill_chunk, page_size=page_size,
+        prefix_cache=prefix_cache,
     )
     eng.run(reqs[:1])  # warmup: compile prefill + decode/chunk step
     t0 = time.perf_counter()
@@ -62,7 +84,7 @@ def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None):
     dt = time.perf_counter() - t0
     tokens = sum(len(v) for v in out.values())
     st = eng.last_stats
-    return {
+    row = {
         "tokens": tokens,
         "seconds": dt,
         "tokens_per_s": tokens / dt,
@@ -73,6 +95,21 @@ def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None):
         "ttft_passes": {str(k): v for k, v in sorted(st.ttft_passes.items())},
         "mean_occupancy": st.mean_occupancy,
     }
+    if st.page_size:
+        # deterministic paged-memory counters (ISSUE-6): live-KV HBM
+        # footprint per emitted token and the prefix-cache economics
+        row.update({
+            "page_size": st.page_size,
+            "kv_page_bytes": st.kv_page_bytes,
+            "kv_hbm_bytes_per_token": st.kv_hbm_bytes_per_token,
+            "prefix_hit_rate": st.prefix_hit_rate,
+            "prefix_hit_tokens": st.prefix_hit_tokens,
+            "prompt_tokens": st.prompt_tokens,
+            "cow_copies": st.cow_copies,
+            "evictions": st.evictions,
+            "admission_deferrals": st.admission_deferrals,
+        })
+    return (row, {k: list(map(int, v)) for k, v in out.items()})
 
 
 def run_lockstep(cfg, params, reqs, *, slots, max_len):
@@ -136,6 +173,12 @@ def main(argv=None):
     ap.add_argument("--new-hi", type=int, default=40)
     ap.add_argument("--arrival-lam", type=float, default=2.0)
     ap.add_argument("--max-len", type=int, default=56)
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page size for the pool_paged / prefix engines")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="shared system-prompt length for the prefix trace")
+    ap.add_argument("--suffix-len", type=int, default=4,
+                    help="per-request unique suffix for the prefix trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write results JSON here")
     ap.add_argument("--no-check", action="store_true",
@@ -151,36 +194,71 @@ def main(argv=None):
     )
     chunk = args.prefill_chunk or args.prompt_len
 
-    pool = run_pool(cfg, params, reqs, slots=args.slots, max_len=args.max_len)
-    chunked = run_pool(cfg, params, reqs, slots=args.slots,
-                       max_len=args.max_len, prefill_chunk=chunk)
+    pool, _ = run_pool(cfg, params, reqs, slots=args.slots,
+                       max_len=args.max_len)
+    chunked, chunked_out = run_pool(cfg, params, reqs, slots=args.slots,
+                                    max_len=args.max_len, prefill_chunk=chunk)
+    paged, paged_out = run_pool(
+        cfg, params, reqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size,
+    )
     lock = run_lockstep(cfg, params, reqs, slots=args.slots,
                         max_len=args.max_len)
+
+    # shared-system-prompt workload: prefix cache off vs on, same engine
+    preqs = shared_prefix_trace(
+        cfg, n_requests=args.requests, prefix_len=args.prefix_len,
+        suffix_len=args.suffix_len, lam=args.arrival_lam,
+        new_lo=args.new_lo, new_hi=min(args.new_hi, 12), seed=args.seed,
+    )
+    prefix_off, off_out = run_pool(
+        cfg, params, preqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size,
+    )
+    prefix_on, on_out = run_pool(
+        cfg, params, preqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size, prefix_cache=True,
+    )
+
     speedup = pool["tokens_per_s"] / lock["tokens_per_s"]
     result = {
         "arch": cfg.name,
         "slots": args.slots,
         "requests": args.requests,
         "prefill_chunk": chunk,
+        "page_size": args.page_size,
         "trace": {
             "prompt_len": args.prompt_len, "arrival_lam": args.arrival_lam,
             "new_tokens": [args.new_lo, args.new_hi], "seed": args.seed,
         },
+        "prefix_trace": {
+            "prefix_len": args.prefix_len, "suffix_len": args.suffix_len,
+            "arrival_lam": args.arrival_lam, "seed": args.seed,
+        },
         "pool": pool,
         "pool_chunked": chunked,
+        "pool_paged": paged,
         "lockstep": lock,
+        "prefix_off": prefix_off,
+        "prefix_on": prefix_on,
+        "prefix_weight_passes_saved":
+            prefix_off["weight_passes"] - prefix_on["weight_passes"],
         "speedup_tokens_per_s": speedup,
     }
     hdr = (f"{'engine':<14}{'tok/s':>10}{'steps':>8}{'passes':>8}"
-           f"{'ttft':>7}{'occupancy':>11}")
+           f"{'ttft':>7}{'occupancy':>11}{'KV B/tok':>10}{'hit':>6}")
     print(hdr)
     for name, row in (("pool", pool), ("pool_chunked", chunked),
-                      ("lockstep", lock)):
+                      ("pool_paged", paged), ("lockstep", lock),
+                      ("prefix_off", prefix_off), ("prefix_on", prefix_on)):
         print(f"{name:<14}{row['tokens_per_s']:>10.1f}"
               f"{row['decode_steps']:>8}{row['weight_passes']:>8}"
               f"{row.get('mean_ttft_passes', float('nan')):>7.2f}"
-              f"{row['mean_occupancy']:>11.2f}")
-    print(f"speedup (pool/lockstep): {speedup:.2f}x")
+              f"{row['mean_occupancy']:>11.2f}"
+              f"{row.get('kv_hbm_bytes_per_token', float('nan')):>10.1f}"
+              f"{row.get('prefix_hit_rate', float('nan')):>6.2f}")
+    print(f"speedup (pool/lockstep): {speedup:.2f}x  "
+          f"prefix passes saved: {result['prefix_weight_passes_saved']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
@@ -205,6 +283,39 @@ def main(argv=None):
                 f"chunked prefill mean TTFT {chunked['mean_ttft_passes']:.2f}"
                 f" passes >= solo-prefill's {pool['mean_ttft_passes']:.2f} — "
                 "admission latency did not improve"
+            )
+        if paged_out != chunked_out:
+            raise SystemExit(
+                "pool_paged emitted different tokens than pool_chunked — "
+                "paged KV layout broke bit-identity"
+            )
+        if paged["kv_hbm_bytes_per_token"] >= chunked["kv_hbm_bytes_per_token"]:
+            raise SystemExit(
+                f"small pages held {paged['kv_hbm_bytes_per_token']:.1f} live "
+                f"KV bytes/token vs page=span's "
+                f"{chunked['kv_hbm_bytes_per_token']:.1f} — page-granular "
+                "freeing bought nothing"
+            )
+        if on_out != off_out:
+            raise SystemExit(
+                "prefix cache changed the emitted tokens — shared pages are "
+                "not bit-identical to recomputed ones"
+            )
+        if prefix_on["prefix_hit_rate"] <= 0.0:
+            raise SystemExit(
+                "prefix cache never hit on the shared-system-prompt trace"
+            )
+        if prefix_on["weight_passes"] >= prefix_off["weight_passes"]:
+            raise SystemExit(
+                f"prefix sharing took {prefix_on['weight_passes']} weight "
+                f"passes vs {prefix_off['weight_passes']} without — mapped "
+                "pages saved no prefill work"
+            )
+        if prefix_on["mean_ttft_passes"] >= prefix_off["mean_ttft_passes"]:
+            raise SystemExit(
+                f"prefix sharing mean TTFT {prefix_on['mean_ttft_passes']:.2f}"
+                f" passes >= {prefix_off['mean_ttft_passes']:.2f} without — "
+                "skipping shared chunks did not cut first-token latency"
             )
         if speedup <= 1.0:
             print(f"WARNING: wall-clock speedup {speedup:.2f}x <= 1 "

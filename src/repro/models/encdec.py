@@ -301,24 +301,43 @@ def prefill(cfg, policy, params, tokens, frames, cache):
 
 
 def decode_step(cfg, policy, params, token, cache):
-    """One decode step.  Like ``transformer.decode_step``, accepts both the
-    lockstep cache (scalar ``len``, shared ``pos``) and the slot-pooled
-    cache (``len`` (B,), ``pos`` (B, span)) with per-slot offsets."""
+    """One decode step.  Like ``transformer.decode_step``, accepts the
+    lockstep cache (scalar ``len``, shared ``pos``), the slot-pooled
+    cache (``len`` (B,), ``pos`` (B, span)) with per-slot offsets, and
+    the paged layout (``table`` leaf; K/V gathered through per-slot page
+    tables — serve/slots.py)."""
+    from repro.models.transformer import _page_view, _sdpa
+
     b = token.shape[0]
     hd = cfg.head_dim
     x = jnp.take(params["embed"], token[:, None], axis=0)
     pos = cache["len"]
     per_slot = pos.ndim == 1
-    span = cache["k"].shape[2]
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        span = table.shape[1] * page
+    else:
+        span = cache["k"].shape[2]
     slot = pos % span
     rows = jnp.arange(b)
-    if per_slot:
+    if paged:
+        qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
+        dest = jnp.take_along_axis(table, (slot // page)[:, None], 1)[:, 0]
+        loff = slot % page
+        kpos = cache["pos"].at[dest, loff].set(pos, mode="drop")
+        kpos_view = _page_view(kpos, table, span)  # (B, span)
+        pq = qpos
+    elif per_slot:
         qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
         kpos = cache["pos"].at[rows, slot].set(pos)  # (B, span)
+        kpos_view = kpos
         pq = qpos
     else:
         qpos = pos[None].astype(jnp.int32)
         kpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+        kpos_view = kpos
         pq = jnp.broadcast_to(qpos[None, :], (b, 1))
     se = cache["ck"].shape[2]
     epos = jax.lax.iota(jnp.int32, se)
@@ -331,9 +350,20 @@ def decode_step(cfg, policy, params, token, cache):
         v = _proj_heads(lp, "wv", h, policy, b, 1, cfg.kv_heads, hd)
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
-        if per_slot:
+        if paged:
+            ck_self = ck_self.at[dest, loff].set(
+                k[:, 0].astype(ck_self.dtype), mode="drop"
+            )
+            cv_self = cv_self.at[dest, loff].set(
+                v[:, 0].astype(cv_self.dtype), mode="drop"
+            )
+            kview = _page_view(ck_self, table, span).astype(q.dtype)
+            vview = _page_view(cv_self, table, span).astype(q.dtype)
+        elif per_slot:
             ck_self = ck_self.at[rows, slot].set(k[:, 0].astype(ck_self.dtype))
             cv_self = cv_self.at[rows, slot].set(v[:, 0].astype(cv_self.dtype))
+            kview = ck_self.astype(q.dtype)
+            vview = cv_self.astype(q.dtype)
         else:
             ck_self = jax.lax.dynamic_update_slice(
                 ck_self, k.astype(ck_self.dtype), (0, slot, 0, 0)
@@ -341,12 +371,10 @@ def decode_step(cfg, policy, params, token, cache):
             cv_self = jax.lax.dynamic_update_slice(
                 cv_self, v.astype(cv_self.dtype), (0, slot, 0, 0)
             )
-        from repro.models.transformer import _sdpa
+            kview = ck_self.astype(q.dtype)
+            vview = cv_self.astype(q.dtype)
 
-        att = _sdpa(
-            cfg, policy, q, ck_self.astype(q.dtype), cv_self.astype(q.dtype),
-            qpos, kpos, None,
-        )
+        att = _sdpa(cfg, policy, q, kview, vview, qpos, kpos_view, None)
         y = carry + mfmac.mf_linear(
             att.reshape(b, 1, cfg.n_heads * hd), lp["wo"]["w"],
             lp["wo"]["gamma"], policy=policy,
@@ -414,11 +442,21 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     qpos -1, dropped scatters, per-row determinism).  Cross-attention
     reads the per-slot ``ck``/``cv`` written at admission by
     :func:`encode_cross_kv`."""
+    from repro.models.transformer import _page_view, _sdpa
+
     b, c = tokens.shape
     hd = cfg.head_dim
     pos0 = cache["len"]
     assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
-    span = cache["k"].shape[2]
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        npg = table.shape[1]
+        span = npg * page
+        drop = cache["pos"].shape[0]  # num_pages + 1 == slots.drop_id
+    else:
+        span = cache["k"].shape[2]
     assert c <= span, (c, span)
     x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
     rows = jnp.arange(b)
@@ -426,32 +464,56 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     valid = offs[None, :] < n_new[:, None]
     gpos = pos0[:, None] + offs[None, :]
     qpos = jnp.where(valid, gpos, -1)
-    sidx = jnp.where(valid, gpos % span, span)
-    kpos_old = cache["pos"]
-    kpos_new = kpos_old.at[rows[:, None], sidx].set(qpos, mode="drop")
+    lo = gpos % span
+    if paged:
+        table_ext = jnp.concatenate(
+            [table, jnp.full((b, 1), drop, table.dtype)], axis=1
+        )
+        lpage = jnp.where(valid, lo // page, npg)
+        dest = jnp.take_along_axis(table_ext, lpage, axis=1)  # (B, C)
+        loff = lo % page
+        kpos_new = cache["pos"].at[dest, loff].set(qpos, mode="drop")
+        kpos_view = _page_view(kpos_new, table, span)
+    else:
+        sidx = jnp.where(valid, lo, span)
+        kpos_new = cache["pos"].at[rows[:, None], sidx].set(qpos, mode="drop")
+        kpos_view = kpos_new
     se = cache["ck"].shape[2]
     epos = jax.lax.iota(jnp.int32, se)
 
     def body(carry, lp_kv):
         lp, ck_self, cv_self, ck_x, cv_x = lp_kv
         h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        # zero pads before the projections: each row's activation-scale
+        # group amax must equal decode_step's (1, D) group so decode rows
+        # are bit-equal across step bodies (transformer.chunk_step docs)
+        h = jnp.where(valid[:, :, None], h, 0.0)
         q = _proj_heads(lp, "wq", h, policy, b, c, cfg.n_heads, hd)
         k = _proj_heads(lp, "wk", h, policy, b, c, cfg.kv_heads, hd)
         v = _proj_heads(lp, "wv", h, policy, b, c, cfg.kv_heads, hd)
         q = common.rope(q, qpos, cfg.rope_theta)
         k = common.rope(k, qpos, cfg.rope_theta)
-        nk = ck_self.at[rows[:, None], sidx].set(
-            k.astype(ck_self.dtype), mode="drop"
+        if paged:
+            nk = ck_self.at[dest, loff].set(k.astype(ck_self.dtype),
+                                            mode="drop")
+            nv = cv_self.at[dest, loff].set(v.astype(cv_self.dtype),
+                                            mode="drop")
+        else:
+            nk = ck_self.at[rows[:, None], sidx].set(
+                k.astype(ck_self.dtype), mode="drop"
+            )
+            nv = cv_self.at[rows[:, None], sidx].set(
+                v.astype(cv_self.dtype), mode="drop"
+            )
+        # scatter-then-attend over the post-scatter span view — the same
+        # reduction decode_step performs (decode fast-path bit-equality);
+        # encdec is never windowed, so no ring wrap can occur
+        kv_k = _page_view(nk, table, span) if paged else nk
+        kv_v = _page_view(nv, table, span) if paged else nv
+        att = _sdpa(
+            cfg, policy, q, kv_k.astype(q.dtype), kv_v.astype(q.dtype),
+            qpos, kpos_view, None,
         )
-        nv = cv_self.at[rows[:, None], sidx].set(
-            v.astype(cv_self.dtype), mode="drop"
-        )
-        from repro.models.transformer import _sdpa
-
-        k_all = jnp.concatenate([ck_self.astype(q.dtype), k], axis=1)
-        v_all = jnp.concatenate([cv_self.astype(q.dtype), v], axis=1)
-        kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)
-        att = _sdpa(cfg, policy, q, k_all, v_all, qpos, kpos_all, None)
         # Pad queries' all-False mask degenerates softmax to a uniform
         # average over every key — stale K/V from a reused slot included.
         # Zero pad rows so they stay functions of their own tokens only
@@ -463,6 +525,7 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy,
         )
         hc = common.layer_norm(y, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"])
+        hc = jnp.where(valid[:, :, None], hc, 0.0)  # same amax argument
         cq = _proj_heads(lp, "cq", hc, policy, b, c, cfg.n_heads, hd)
         catt = _mha(
             cfg, policy, cq, ck_x.astype(cq.dtype), cv_x.astype(cq.dtype),
@@ -478,6 +541,7 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             catt, lp["co"]["w"], lp["co"]["gamma"], policy=policy,
         )
         h2 = common.layer_norm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        h2 = jnp.where(valid[:, :, None], h2, 0.0)  # same amax argument
         m = common.gelu(
             mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
         )

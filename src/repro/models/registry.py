@@ -80,13 +80,31 @@ POOLED_FAMILIES = ("decoder", "vlm", "encdec", "ssm", "hybrid")
 #: prefill instead.
 CHUNKED_FAMILIES = ("decoder", "vlm", "encdec")
 
+#: Families whose pool cache is block-table **paged** (serve/slots.py):
+#: fixed-size KV pages gathered through per-slot page tables inside the
+#: step bodies.  ssm/hybrid recurrent state is O(1) in sequence length —
+#: there is nothing to page — so they keep the lifted slot-row layout.
+PAGED_FAMILIES = ("decoder", "vlm", "encdec")
+
+
+def pool_span(cfg: ModelConfig, max_len: int) -> int:
+    """Logical cache span per slot (the ring window caps it)."""
+    return min(max_len, cfg.window) if cfg.window else max_len
+
 
 def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
-                    dtype=jnp.bfloat16):
-    """Slot-pooled decode cache: ``init_cache`` with the batch axis as the
-    slot axis and the ``pos``/``len`` leaves lifted to per-slot arrays
-    ((max_slots, span) / (max_slots,)).  Built ONCE per engine; requests
-    are prefilled into rows via ``serve.slots.write_slot``."""
+                    dtype=jnp.bfloat16, *, page_size=None, num_pages=None):
+    """Pooled decode cache, built ONCE per engine.
+
+    Attention families (``PAGED_FAMILIES``) get the block-table paged
+    layout (``serve.slots.page_pool_cache``): K/V pages of ``page_size``
+    positions (default: the whole span — one page per slot, the
+    legacy-equivalent geometry), ``num_pages`` physical pages (default
+    ``max_slots * span/page_size``, capacity-neutral) plus the null page,
+    and a (max_slots, span/page_size) page table.  Recurrent families
+    keep the lifted slot-row layout (per-slot ``pos``/``len``); their
+    callers must leave ``page_size``/``num_pages`` unset.
+    """
     if cfg.family not in POOLED_FAMILIES:
         raise NotImplementedError(
             f"family {cfg.family!r} does not support slot-pooled decode "
@@ -94,8 +112,18 @@ def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
         )
     from repro.serve import slots  # lazy: registry stays importable alone
 
-    return slots.lift_cache(init_cache(cfg, max_slots, max_len, dtype),
-                            max_slots)
+    base = init_cache(cfg, max_slots, max_len, dtype)
+    if cfg.family in PAGED_FAMILIES:
+        span = pool_span(cfg, max_len)
+        return slots.page_pool_cache(
+            base, max_slots, page_size or span, num_pages
+        )
+    if page_size is not None or num_pages is not None:
+        raise ValueError(
+            f"family {cfg.family!r} has no paged cache "
+            f"(paged: {PAGED_FAMILIES})"
+        )
+    return slots.lift_cache(base, max_slots)
 
 
 def prefill(cfg, policy, params, batch, cache):

@@ -452,17 +452,34 @@ def prefill(cfg, policy, params, tokens, cache, patch_embeds=None):
     return logits[:, -1, :], cache
 
 
+def _page_view(leaf, table, span):
+    """Logical (B, span, ...) row view of a physical page store
+    (P, page, ...): gather the slot tables, flatten pages back into a
+    span.  Out-of-bounds table entries (serve.slots.drop_id — retired /
+    unallocated slots) clamp onto the null page, whose ``pos`` is -1, so
+    everything they contribute is masked out of attention."""
+    b = table.shape[0]
+    x = leaf[table]  # (B, n, page, ...)
+    return x.reshape((b, span) + x.shape[3:])
+
+
 def decode_step(cfg, policy, params, token, cache):
     """One decode step.  token: (B,) int32 -> (logits (B, V), new cache).
 
-    Two cache layouts are accepted (``registry.init_cache`` vs
+    Three cache layouts are accepted (``registry.init_cache`` vs
     ``registry.init_pool_cache``):
 
     * lockstep — ``len`` scalar, ``pos`` (span,): every row decodes at the
       same position (the pre-pool batched path);
     * slot-pooled — ``len`` (B,), ``pos`` (B, span): each row is a serving
       slot with its own cache offset, so requests admitted mid-flight
-      decode next to requests deep into generation (serve/engine.py).
+      decode next to requests deep into generation (serve/engine.py);
+    * paged — slot-pooled plus a ``table`` leaf (serve/slots.py): K/V live
+      in fixed-size pages and each slot's row is gathered through its page
+      table.  The gathered view contains exactly the same (position,
+      value) pairs the contiguous row would, in the same logical order, so
+      the attention reduction — and the served bits — are invariant to
+      the physical page layout and the page size.
 
     MoE layers dispatch **per slot** (``_moe_apply(per_slot=True)``): each
     row has its own expert capacity, so neither retired nor live
@@ -473,18 +490,34 @@ def decode_step(cfg, policy, params, token, cache):
     x = jnp.take(params["embed"], token[:, None], axis=0)
     pos = cache["len"]
     per_slot = pos.ndim == 1
-    span = cache["k"].shape[2]
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        span = table.shape[1] * page
+    else:
+        span = cache["k"].shape[2]
     slot = pos % span
     rows = jnp.arange(b)
-    if per_slot:
+    if paged:
+        qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
+        # physical write target; drop_id rows (dead slots) scatter-drop
+        dest = jnp.take_along_axis(table, (slot // page)[:, None], 1)[:, 0]
+        loff = slot % page
+        kpos_new = cache["pos"].at[dest, loff].set(pos, mode="drop")
+        kpos_view = _page_view(kpos_new, table, span)  # (B, span)
+        pq = qpos
+    elif per_slot:
         qpos = pos[:, None].astype(jnp.int32)  # (B, 1)
         kpos_new = cache["pos"].at[rows, slot].set(pos)  # (B, span)
+        kpos_view = kpos_new
         pq = qpos
     else:
         qpos = pos[None].astype(jnp.int32)  # (1,)
         kpos_new = jax.lax.dynamic_update_slice(
             cache["pos"], pos[None], (slot,)
         )
+        kpos_view = kpos_new
         pq = jnp.broadcast_to(qpos[None, :], (b, 1))
 
     def carry_block(carry, lp_kv):
@@ -499,9 +532,15 @@ def decode_step(cfg, policy, params, token, cache):
         v = v.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
-        if per_slot:
+        if paged:
+            ck = ck.at[dest, loff].set(k[:, 0].astype(ck.dtype), mode="drop")
+            cv = cv.at[dest, loff].set(v[:, 0].astype(cv.dtype), mode="drop")
+            kview = _page_view(ck, table, span).astype(q.dtype)
+            vview = _page_view(cv, table, span).astype(q.dtype)
+        elif per_slot:
             ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
             cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+            kview, vview = ck.astype(q.dtype), cv.astype(q.dtype)
         else:
             ck = jax.lax.dynamic_update_slice(
                 ck, k.astype(ck.dtype), (0, slot, 0, 0)
@@ -509,10 +548,8 @@ def decode_step(cfg, policy, params, token, cache):
             cv = jax.lax.dynamic_update_slice(
                 cv, v.astype(cv.dtype), (0, slot, 0, 0)
             )
-        att = _sdpa(
-            cfg, policy, q, ck.astype(q.dtype), cv.astype(q.dtype),
-            qpos, kpos_new, cfg.window,
-        )
+            kview, vview = ck.astype(q.dtype), cv.astype(q.dtype)
+        att = _sdpa(cfg, policy, q, kview, vview, qpos, kpos_view, cfg.window)
         att = att.reshape(b, 1, cfg.n_heads * cfg.head_dim)
         y = carry + mfmac.mf_linear(
             att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
@@ -535,6 +572,8 @@ def decode_step(cfg, policy, params, token, cache):
         "pos": kpos_new,
         "len": pos + 1,
     }
+    if paged:
+        new_cache["table"] = table
     return logits, new_cache
 
 
@@ -552,17 +591,33 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     depend only on its own (tokens, n_new) trajectory, never on its pool
     neighbours (the serve bit-identity guarantee, chunked edition).
 
-    Within-chunk attention runs over [ring cache ∪ fresh chunk K/V] so a
-    ring wrap inside the chunk (windowed archs) can't overwrite keys that
-    earlier chunk positions still need; requires C <= span.
+    Attention layout depends on the window.  Windowed archs attend over
+    [ring cache ∪ fresh chunk K/V] so a ring wrap inside the chunk can't
+    overwrite keys that earlier chunk positions still need; requires
+    C <= span.  Without a window no wrap can occur (every gpos < span),
+    so the step scatters first and attends over the post-scatter cache
+    view — the *same* reduction ``decode_step`` performs — and pad
+    positions are zeroed at each norm output so per-row activation-scale
+    groups match decode's.  Together these make a decode row (n_new == 1)
+    bit-equal between ``chunk_step`` and ``decode_step``, which is what
+    lets the engine's decode fast-path switch step bodies mid-request.
 
     Returns (logits (B, V) at each slot's last valid position, new pooled
-    cache).  Slot-pooled caches only (``len`` (B,), ``pos`` (B, span)).
+    cache).  Slot-pooled caches only (``len`` (B,), ``pos`` (B, span) —
+    or the paged layout with a ``table`` leaf, see serve/slots.py).
     """
     b, c = tokens.shape
     pos0 = cache["len"]
     assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
-    span = cache["k"].shape[2]
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        npg = table.shape[1]
+        span = npg * page
+        drop = cache["pos"].shape[0]  # num_pages + 1 == slots.drop_id
+    else:
+        span = cache["k"].shape[2]
     assert c <= span, (c, span)
     x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
     rows = jnp.arange(b)
@@ -572,13 +627,35 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     qpos = jnp.where(valid, gpos, -1)
     # ring slot per valid position; invalid positions scatter out of
     # bounds and are dropped (C <= span => no duplicate valid slots)
-    sidx = jnp.where(valid, gpos % span, span)
-    kpos_old = cache["pos"]  # (B, span), pre-step — all entries < pos0
-    kpos_new = kpos_old.at[rows[:, None], sidx].set(qpos, mode="drop")
+    lo = gpos % span
+    if paged:
+        # physical (page, offset) write target per valid position; pads
+        # route through an extra all-drop table column
+        table_ext = jnp.concatenate(
+            [table, jnp.full((b, 1), drop, table.dtype)], axis=1
+        )
+        lpage = jnp.where(valid, lo // page, npg)
+        dest = jnp.take_along_axis(table_ext, lpage, axis=1)  # (B, C)
+        loff = lo % page
+        kpos_old = _page_view(cache["pos"], table, span)  # (B, span)
+        kpos_new = cache["pos"].at[dest, loff].set(qpos, mode="drop")
+        kpos_view = _page_view(kpos_new, table, span)
+    else:
+        sidx = jnp.where(valid, lo, span)
+        kpos_old = cache["pos"]  # (B, span), pre-step — all entries < pos0
+        kpos_new = kpos_old.at[rows[:, None], sidx].set(qpos, mode="drop")
+        kpos_view = kpos_new
+    windowed = cfg.window is not None
 
     def carry_block(carry, lp_kv):
         lp, ck, cv = lp_kv
         h = common.apply_norm(cfg.norm, carry, lp["ln1"])
+        # Zero pad positions BEFORE the projections: each row's
+        # activation-scale group is its (C, D) block, so with pads
+        # zeroed the group amax equals the single valid row's — the same
+        # amax decode_step's (1, D) group sees.  Decode-row bit-equality
+        # across step bodies hinges on this.
+        h = jnp.where(valid[:, :, None], h, 0.0)
         q = mfmac.mf_linear(h, lp["wq"]["w"], lp["wq"]["gamma"], policy=policy)
         k = mfmac.mf_linear(h, lp["wk"]["w"], lp["wk"]["gamma"], policy=policy)
         v = mfmac.mf_linear(h, lp["wv"]["w"], lp["wv"]["gamma"], policy=policy)
@@ -587,15 +664,37 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
         v = v.reshape(b, c, cfg.kv_heads, cfg.head_dim)
         q = common.rope(q, qpos, cfg.rope_theta)
         k = common.rope(k, qpos, cfg.rope_theta)
-        nk = ck.at[rows[:, None], sidx].set(k.astype(ck.dtype), mode="drop")
-        nv = cv.at[rows[:, None], sidx].set(v.astype(cv.dtype), mode="drop")
-        # attend over [old cache ∪ fresh chunk]: old entries hold only
-        # positions < pos0, fresh ones >= pos0 (qpos -1 where invalid),
-        # so the position mask sees each key exactly once
-        k_all = jnp.concatenate([ck.astype(q.dtype), k], axis=1)
-        v_all = jnp.concatenate([cv.astype(q.dtype), v], axis=1)
-        kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)  # (B, span+C)
-        att = _sdpa(cfg, policy, q, k_all, v_all, qpos, kpos_all, cfg.window)
+        if paged:
+            nk = ck.at[dest, loff].set(k.astype(ck.dtype), mode="drop")
+            nv = cv.at[dest, loff].set(v.astype(cv.dtype), mode="drop")
+        else:
+            nk = ck.at[rows[:, None], sidx].set(k.astype(ck.dtype),
+                                                mode="drop")
+            nv = cv.at[rows[:, None], sidx].set(v.astype(cv.dtype),
+                                                mode="drop")
+        if windowed:
+            # attend over [old cache ∪ fresh chunk]: old entries hold
+            # only positions < pos0, fresh ones >= pos0 (qpos -1 where
+            # invalid), so the position mask sees each key exactly once
+            # even when the ring wraps mid-chunk
+            ok = _page_view(ck, table, span) if paged else ck
+            ov = _page_view(cv, table, span) if paged else cv
+            k_all = jnp.concatenate([ok.astype(q.dtype), k], axis=1)
+            v_all = jnp.concatenate([ov.astype(q.dtype), v], axis=1)
+            kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)
+            att = _sdpa(
+                cfg, policy, q, k_all, v_all, qpos, kpos_all, cfg.window
+            )
+        else:
+            # scatter-then-attend over the post-scatter span view — the
+            # identical reduction decode_step performs (decode fast-path
+            # bit-equality); no window => no ring wrap => safe
+            kv_k = _page_view(nk, table, span) if paged else nk
+            kv_v = _page_view(nv, table, span) if paged else nv
+            att = _sdpa(
+                cfg, policy, q, kv_k.astype(q.dtype), kv_v.astype(q.dtype),
+                qpos, kpos_view, None,
+            )
         att = att.reshape(b, c, cfg.n_heads * cfg.head_dim)
         # A pad query's mask is all-False => softmax degenerates to a
         # UNIFORM average over every key — including a reused slot's
@@ -607,6 +706,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
         )
         h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
+        # same group-amax argument as h above, for the MLP/MoE input
+        h2 = jnp.where(valid[:, :, None], h2, 0.0)
         if cfg.moe is not None:
             y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
         else:
@@ -628,4 +729,6 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
         "pos": kpos_new,
         "len": pos0 + n_new,
     }
+    if paged:
+        new_cache["table"] = table
     return logits, new_cache

@@ -139,6 +139,12 @@ class ShardingPlan:
     # covers the registry.init_pool_cache tree — batch axis == slot axis,
     # pos/len lifted to per-slot arrays (replicated; they are tiny int32).
     pool_slots: Optional[int] = None
+    # Paged-pool geometry the cache specs were keyed by (PAGED_FAMILIES
+    # pool plans; None on legacy / unpaged / non-pool plans).  PoolEngine
+    # refuses a plan whose geometry differs from its own — the cache
+    # shapes (num_pages+1 physical pages of page_size) would not match.
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
 
     # -- shardings ---------------------------------------------------------
     def named(self, spec: P) -> NamedSharding:
@@ -235,7 +241,9 @@ def _moe_decision(spec_axes, pspec: P, mesh) -> Optional[str]:
 
 
 def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
-             pool_slots: Optional[int] = None) -> ShardingPlan:
+             pool_slots: Optional[int] = None,
+             page_size: Optional[int] = None,
+             num_pages: Optional[int] = None) -> ShardingPlan:
     """Build (and by default validate) the plan for ``cfg`` on ``mesh``.
 
     ``shape`` (a ``ShapeConfig``) additionally plans the batch dict, and —
@@ -247,6 +255,12 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
     in place of the batch axis, per-slot ``pos``/``len`` leaves — these
     stay replicated per the ``cache_pspecs`` name rules).  Must equal the
     decode ``shape.global_batch``: the pool IS the decode batch.
+
+    ``page_size``/``num_pages`` key a pool plan's cache specs by page
+    geometry (PAGED_FAMILIES): the planned k/v leaves become physical
+    page stores (num_pages+1, page_size) instead of slot rows, and the
+    resolved geometry is recorded on the plan so a :class:`PoolEngine`
+    built with different paging refuses it up front.
     """
     # local imports: keep repro.parallel importable without the model zoo
     from repro.data import pipeline
@@ -285,9 +299,15 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
                         f"shape's global_batch={shape.global_batch}: the "
                         "pool IS the decode batch"
                     )
+                if cfg.family in registry.PAGED_FAMILIES:
+                    span = registry.pool_span(cfg, shape.seq_len)
+                    page_size = page_size or span
+                    if num_pages is None:
+                        num_pages = pool_slots * (span // page_size)
                 abstract_cache = jax.eval_shape(
                     lambda: registry.init_pool_cache(
-                        cfg, pool_slots, shape.seq_len
+                        cfg, pool_slots, shape.seq_len,
+                        page_size=page_size, num_pages=num_pages,
                     )
                 )
             else:
@@ -310,6 +330,7 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
         mesh=mesh, params=params, data=data, cache=cache,
         moe=moe, report=tuple(report), shape=shape,
         cache_abstract=abstract_cache, specs=specs, pool_slots=pool_slots,
+        page_size=page_size, num_pages=num_pages,
     )
     if validate:
         plan.validate()

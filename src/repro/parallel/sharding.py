@@ -177,6 +177,13 @@ def cache_pspecs(mesh: Mesh, cache_tree):
       pos/len:   replicated
     Ragged dims (whisper's 1500-frame cross cache, batch=1 long-context)
     fall back to replication per-dim.
+
+    Paged pool caches (serve/slots.py) reuse the same name rules: k/v
+    become (L, num_pages+1, page, KV, hd), so the 5-D rule lands fsdp on
+    the physical-page dim (replication fallback when num_pages+1 doesn't
+    divide) and model on the in-page position dim; ``pos`` (2-D) and the
+    int32 ``table`` fall through to replicated — they are tiny and every
+    device needs them for the gather.
     """
     fa = fsdp_axes(mesh)
     ma = model_axis(mesh)

@@ -8,4 +8,9 @@ from repro.serve.engine import (  # noqa: F401
     make_prefill_step,
 )
 from repro.serve.scheduler import FIFOScheduler, Request  # noqa: F401
-from repro.serve.trace import poisson_trace  # noqa: F401
+from repro.serve.slots import (  # noqa: F401
+    AdmissionPlan,
+    PageAllocator,
+    PageAllocatorError,
+)
+from repro.serve.trace import poisson_trace, shared_prefix_trace  # noqa: F401

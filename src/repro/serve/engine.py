@@ -275,6 +275,16 @@ class ServeStats:
     occupancy_sum: float = 0.0  # sum over steps of occupied/max_slots
     weight_passes: int = 0
     ttft_passes: Dict = dataclasses.field(default_factory=dict)
+    # paged-pool counters (zero for unpaged families) — all deterministic
+    # for a fixed trace, so benchmarks/compare.py gates on them directly
+    prompt_tokens: int = 0  # total prompt tokens across admitted requests
+    prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
+    cow_copies: int = 0
+    evictions: int = 0
+    admission_deferrals: int = 0  # head-blocked admissions (page pressure)
+    pages_in_use_sum: int = 0  # sum over decode steps of live pages
+    page_size: int = 0
+    kv_page_bytes: int = 0  # HBM bytes of one K+V page across all layers
 
     @property
     def mean_occupancy(self) -> float:
@@ -285,6 +295,20 @@ class ServeStats:
         if not self.ttft_passes:
             return 0.0
         return sum(self.ttft_passes.values()) / len(self.ttft_passes)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        if not self.prompt_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prompt_tokens
+
+    @property
+    def kv_hbm_bytes_per_token(self) -> float:
+        """Mean live KV HBM footprint per emitted token: the capacity side
+        of the paged refactor (pages, not whole rows, pin memory)."""
+        if not self.emitted_tokens:
+            return 0.0
+        return self.pages_in_use_sum * self.kv_page_bytes / self.emitted_tokens
 
 
 class PoolEngine:
@@ -323,6 +347,9 @@ class PoolEngine:
                  max_slots: int, max_len: int, cache_dtype=jnp.bfloat16,
                  prequantize: bool = True,
                  prefill_chunk: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
                  plan: Optional[ShardingPlan] = None):
         if cfg.family not in registry.POOLED_FAMILIES:
             raise NotImplementedError(
@@ -334,13 +361,45 @@ class PoolEngine:
                     f"prefill_chunk: family {cfg.family!r} has no fused "
                     f"chunk step (supported: {registry.CHUNKED_FAMILIES})"
                 )
-            span = min(max_len, cfg.window) if cfg.window else max_len
+            span = registry.pool_span(cfg, max_len)
             if not 1 <= prefill_chunk <= span:
                 raise ValueError(
                     f"prefill_chunk={prefill_chunk} must be in [1, "
                     f"{span}] (the cache span) so a chunk's ring writes "
                     "cannot collide"
                 )
+        self.paged = cfg.family in registry.PAGED_FAMILIES
+        if not self.paged and (page_size is not None or num_pages is not None
+                               or prefix_cache):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged cache (paged: "
+                f"{registry.PAGED_FAMILIES}); drop page_size/num_pages/"
+                "prefix_cache"
+            )
+        if self.paged:
+            span = registry.pool_span(cfg, max_len)
+            self.page_size = page_size or span
+            if span % self.page_size != 0:
+                raise ValueError(
+                    f"page_size={self.page_size} must divide the cache "
+                    f"span {span}"
+                )
+            self.pages_per_slot = span // self.page_size
+            self.num_pages = (max_slots * self.pages_per_slot
+                              if num_pages is None else num_pages)
+            if self.num_pages < self.pages_per_slot:
+                raise ValueError(
+                    f"num_pages={self.num_pages} < pages_per_slot="
+                    f"{self.pages_per_slot}: nothing could ever be admitted"
+                )
+        if prefix_cache:
+            if prefill_chunk is None:
+                raise ValueError(
+                    "prefix_cache needs prefill_chunk: solo prefill's "
+                    "activation-scale groups cover the whole prompt, so "
+                    "its pages are never content-shareable"
+                )
+        self.prefix_cache = prefix_cache
         if prequantize and policy.enabled and not policy.weights_prequantized:
             from repro.serve import quantized_weights as qw
 
@@ -359,6 +418,19 @@ class PoolEngine:
                 f"pool_slots={getattr(plan, 'pool_slots', None)!r}, "
                 f"max_slots={max_slots}"
             )
+        if plan is not None and self.paged:
+            plan_page = getattr(plan, "page_size", None)
+            plan_np = getattr(plan, "num_pages", None)
+            if plan_page is not None and (
+                plan_page != self.page_size or plan_np != self.num_pages
+            ):
+                raise ValueError(
+                    "PoolEngine plan was built for page geometry "
+                    f"(page_size={plan_page}, num_pages={plan_np}) but the "
+                    f"engine uses (page_size={self.page_size}, "
+                    f"num_pages={self.num_pages}); rebuild the plan with "
+                    "planner.plan_for(..., page_size=..., num_pages=...)"
+                )
         self.cfg = cfg
         self.policy = policy
         self.params = params
@@ -393,26 +465,40 @@ class PoolEngine:
                 plen += int(jnp.asarray(r.extras["patch_embeds"]).shape[1])
             need = plen + r.max_new_tokens
             # Windowed archs decode from a ring whose wrap is the model
-            # semantics, and ssm state is O(1) in sequence length;
-            # everything else must fit the cache or the ring wrap would
+            # semantics, and ssm/hybrid recurrent state is O(1) in
+            # sequence length; everything else must fit its page budget
+            # (unpaged: the contiguous row) or the ring wrap would
             # silently change the request's tokens.
-            if (self.cfg.family != "ssm" and self.cfg.window is None
-                    and need > self.max_len):
+            if self.cfg.family == "ssm" or self.cfg.window is not None:
+                continue
+            if self.paged:
+                need_pages = -(-need // self.page_size)
+                if need_pages > self.pages_per_slot:
+                    raise ValueError(
+                        f"request {r.uid!r}: prompt ({plen}) + "
+                        f"max_new_tokens ({r.max_new_tokens}) = {need} "
+                        f"tokens need {need_pages} pages of "
+                        f"{self.page_size}, exceeding the per-slot budget "
+                        f"of {self.pages_per_slot} pages "
+                        f"(max_len={self.max_len})"
+                    )
+            elif need > self.max_len:
                 raise ValueError(
                     f"request {r.uid!r}: prompt ({plen}) + max_new_tokens "
                     f"({r.max_new_tokens}) = {need} exceeds the pool's "
                     f"max_len={self.max_len}"
                 )
 
-    def _prefill_into(self, cache, slot: int, req: Request):
+    def _prefill_into(self, cache, slot: int, req: Request, pages=None):
         """Solo-prefill ``req`` (batch 1) and copy the result into ``slot``.
-        Returns (new pool cache, first generated token)."""
+        Returns (new pool cache, first generated token).  ``pages`` routes
+        the write through the slot's allocated pages on a paged pool."""
         mini = registry.init_cache(self.cfg, 1, self.max_len, self.cache_dtype)
         batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)}
         batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         logits, mini = self._prefill(self.params, batch, mini)
         tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
-        cache = slots_lib.write_slot(cache, mini, slot)
+        cache = slots_lib.write_slot(cache, mini, slot, pages=pages)
         return cache, tok
 
     def _chunkable(self, req: Request) -> bool:
@@ -422,12 +508,16 @@ class PoolEngine:
         return (self.prefill_chunk is not None
                 and "patch_embeds" not in req.extras)
 
-    def _admit_chunked(self, cache, slot: int, req: Request):
-        """Chunked admission: rewind the slot's position bookkeeping; the
-        prompt then streams into the live pool cache via the fused chunk
-        steps.  encdec additionally runs the encoder side here (one
-        fixed-shape pass) and writes the slot's cross-attention K/V."""
-        cache = slots_lib.reset_slot(cache, slot)
+    def _admit_chunked(self, cache, slot: int, req: Request, *,
+                       reset: bool = True):
+        """Chunked admission: rewind the slot's position bookkeeping (on
+        engine-managed paged pools the allocator sync already did — and a
+        blanket reset would clobber shared prefix pages, so ``reset=False``
+        there); the prompt then streams into the live pool cache via the
+        fused chunk steps.  encdec additionally runs the encoder side here
+        (one fixed-shape pass) and writes the slot's cross-attention K/V."""
+        if reset:
+            cache = slots_lib.reset_slot(cache, slot)
         if self.cfg.family == "encdec":
             if self._encxkv is None:
                 self._encxkv = _shared_step(
@@ -446,6 +536,53 @@ class PoolEngine:
             )
         return cache
 
+    # -- paged admission ----------------------------------------------------
+    def _request_tokens(self, req: Request) -> int:
+        plen = int(jnp.asarray(req.tokens).shape[-1])
+        if "patch_embeds" in req.extras:
+            plen += int(jnp.asarray(req.extras["patch_embeds"]).shape[1])
+        return plen
+
+    def _admission_plan(self, alloc, req: Request):
+        """Page plan for one request: worst-case token need (capped at the
+        span — ring wraps revisit pages) + prefix-cache lookup for
+        chunk-streamed prompts when enabled."""
+        need = self._request_tokens(req) + req.max_new_tokens
+        span = self.page_size * self.pages_per_slot
+        prompt = None
+        chunk = None
+        if (self.prefix_cache and self._chunkable(req)
+                and self.cfg.window is None):
+            prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+            chunk = self.prefill_chunk
+        return alloc.plan_admission(prompt, min(need, span), chunk)
+
+    def _sync_admission(self, cache, slot: int, hold, aplan):
+        """Mirror one allocator admission into the device cache: the
+        slot's table row (drop-padded), fresh-page ``pos`` resets, COW
+        content copies (with future positions clamped back to the -1
+        sentinel, matching what a solo replay would hold at ``resume``),
+        and ``len`` = the prompt position streaming resumes from."""
+        drop = slots_lib.drop_id(self.num_pages)
+        row = list(hold["table"])
+        row += [drop] * (self.pages_per_slot - len(row))
+        cache = dict(cache)
+        cache["table"] = cache["table"].at[slot].set(
+            jnp.asarray(row, jnp.int32)
+        )
+        if hold["new"]:
+            idx = jnp.asarray(hold["new"], jnp.int32)
+            cache["pos"] = cache["pos"].at[idx].set(-1)
+        for src, dst in hold["copies"]:
+            for key in ("k", "v"):
+                cache[key] = cache[key].at[:, dst].set(cache[key][:, src])
+            sp = cache["pos"][src]
+            cache["pos"] = cache["pos"].at[dst].set(
+                jnp.where(sp < aplan.resume, sp, -1)
+            )
+        cache["len"] = cache["len"].at[slot].set(aplan.resume)
+        return cache
+
     # -- main loop ---------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> Dict:
         """Drive all ``requests`` to completion; returns {uid: np.ndarray of
@@ -458,9 +595,22 @@ class PoolEngine:
         for r in requests:
             sched.submit(r)
         stats = ServeStats()
+        alloc = None
+        if self.paged:
+            alloc = slots_lib.PageAllocator(
+                self.num_pages, self.page_size, self.pages_per_slot,
+                self.max_slots,
+            )
+            stats.page_size = self.page_size
+            dt = jnp.dtype(self.cache_dtype).itemsize
+            stats.kv_page_bytes = (
+                2 * self.cfg.n_layers * self.page_size
+                * self.cfg.kv_heads * self.cfg.head_dim * dt
+            )
         out: Dict = {r.uid: [] for r in requests}
         remaining: Dict[int, int] = {}  # slot -> tokens still to emit
         pending: Dict[int, np.ndarray] = {}  # slot -> unconsumed prompt
+        prompts: Dict[int, np.ndarray] = {}  # slot -> full prompt (paged)
         arrival_pass: Dict = {}  # uid -> weight_passes when first admissible
         last_tok = np.zeros((self.max_slots,), np.int32)
         chunk = self.prefill_chunk
@@ -470,6 +620,25 @@ class PoolEngine:
             for arr, uid in sched.pending_arrivals():
                 if arr <= step and uid not in arrival_pass:
                     arrival_pass[uid] = stats.weight_passes
+
+        holds: List = []  # reserve() results, FIFO with sched.admit's pairs
+
+        def can_admit_cb(req):
+            aplan = self._admission_plan(alloc, req)
+            protect = set(aplan.shared) | {p for p, _ in aplan.cow}
+            if not alloc.can_admit(alloc.fresh_needed(aplan), protect):
+                stats.admission_deferrals += 1
+                return False
+            # commit now: the next head's check must see these pages gone
+            holds.append((aplan, alloc.reserve(aplan)))
+            return True
+
+        def retire(slot):
+            sched.retire(slot)
+            if alloc is not None:
+                alloc.release_slot(slot)
+                dead_rows.append(slot)
+            prompts.pop(slot, None)
 
         def first_token(slot, req, tok):
             out[req.uid].append(tok)
@@ -481,7 +650,7 @@ class PoolEngine:
             )
             remaining[slot] = req.max_new_tokens - 1
             if remaining[slot] <= 0 or tok == req.eos_id:
-                sched.retire(slot)
+                retire(slot)
 
         ctx = (actshard.use_plan(self.plan) if self.plan is not None
                else contextlib.nullcontext())
@@ -489,21 +658,56 @@ class PoolEngine:
             if self._prefill is None:  # plan mode: build inside the context
                 self._prefill = make_prefill_step(self.cfg, self.policy)
             cache = registry.init_pool_cache(
-                self.cfg, self.max_slots, self.max_len, self.cache_dtype
+                self.cfg, self.max_slots, self.max_len, self.cache_dtype,
+                **({"page_size": self.page_size, "num_pages": self.num_pages}
+                   if self.paged else {}),
             )
+            if alloc is not None:
+                # engine-managed pool: the allocator owns every mapping, so
+                # void the identity table init — dead slots must scatter
+                # into nothing, not into pages the allocator will hand out
+                cache = dict(cache)
+                cache["table"] = jnp.full(
+                    (self.max_slots, self.pages_per_slot),
+                    slots_lib.drop_id(self.num_pages), jnp.int32,
+                )
             while not sched.all_done():
                 stamp_arrivals()
-                for slot, req in sched.admit(step):
+                dead_rows: List[int] = []
+                if alloc is not None:
+                    alloc.tick(step)
+                for slot, req in sched.admit(
+                    step, can_admit_cb if alloc is not None else None
+                ):
+                    stats.prompt_tokens += int(
+                        jnp.asarray(req.tokens).shape[-1]
+                    )
+                    aplan = None
+                    if alloc is not None:
+                        aplan, hold = holds.pop(0)
+                        alloc.bind(slot, hold)
+                        cache = self._sync_admission(cache, slot, hold, aplan)
+                        stats.prefix_hit_tokens += aplan.hit_tokens
                     if self._chunkable(req):
-                        cache = self._admit_chunked(cache, slot, req)
+                        cache = self._admit_chunked(
+                            cache, slot, req, reset=alloc is None
+                        )
                         if self.cfg.family == "encdec":
                             stats.weight_passes += 1  # encoder-side pass
                         sched.mark_prefilling(slot)
-                        pending[slot] = np.asarray(
-                            req.tokens, np.int32
-                        ).reshape(-1)
+                        prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+                        prompts[slot] = prompt
+                        resume = aplan.resume if aplan is not None else 0
+                        pending[slot] = prompt[resume:]
                     else:
-                        cache, tok = self._prefill_into(cache, slot, req)
+                        pages = hold["table"] if alloc is not None else None
+                        if pages is not None:
+                            pages = pages + [
+                                slots_lib.drop_id(self.num_pages)
+                            ] * (self.pages_per_slot - len(pages))
+                        cache, tok = self._prefill_into(
+                            cache, slot, req, pages=pages
+                        )
                         stats.prefills += 1
                         stats.weight_passes += 1
                         first_token(slot, req, tok)
@@ -512,13 +716,22 @@ class PoolEngine:
                 if not active and not prefilling:
                     # Fast-forward the clock to the next arrival instead of
                     # spinning empty decode steps.
+                    if dead_rows:
+                        cache = self._void_table_rows(cache, dead_rows)
                     nxt = sched.next_arrival()
                     if nxt is None:
                         break
                     step = max(step + 1, nxt)
                     continue
                 finishing = []
-                if chunk is None:
+                if chunk is None or (not prefilling and self.cfg.window is None):
+                    # decode fast-path: with nobody PREFILLING the fused
+                    # chunk step degenerates to plain decode — and the two
+                    # step bodies are bit-equal on decode rows (pinned by
+                    # tests/conformance), so dispatching the cheaper one
+                    # mid-request never changes served tokens.  Windowed
+                    # archs keep the chunk step (its in-chunk ring-wrap
+                    # concat layout differs from decode's scatter).
                     ntok, _, cache = self._decode(
                         self.params, jnp.asarray(last_tok), cache
                     )
@@ -546,9 +759,16 @@ class PoolEngine:
                 stats.occupancy_sum += (
                     (len(active) + len(prefilling)) / self.max_slots
                 )
+                if alloc is not None:
+                    stats.pages_in_use_sum += alloc.pages_in_use()
                 for slot in finishing:
                     sched.finish_prefill(slot)
                     stats.prefills += 1
+                    if (alloc is not None and self.prefix_cache
+                            and self.cfg.window is None):
+                        # publish the finished prompt's full pages for
+                        # reuse BEFORE first_token may retire the slot
+                        alloc.register_prefix(slot, prompts[slot], chunk)
                     first_token(slot, sched.active_request(slot),
                                 int(ntok_host[slot]))
                 for slot in active:
@@ -559,11 +779,29 @@ class PoolEngine:
                     stats.emitted_tokens += 1
                     remaining[slot] -= 1
                     if remaining[slot] <= 0 or tok == req.eos_id:
-                        sched.retire(slot)
+                        retire(slot)
+                if dead_rows:
+                    # retired slots keep riding the fixed-shape dispatch;
+                    # void their table rows so their scatters drop instead
+                    # of landing in pages the allocator may reassign
+                    cache = self._void_table_rows(cache, dead_rows)
                 sched.check_conservation()
+                if alloc is not None:
+                    alloc.check_conservation()
                 step += 1
+        if alloc is not None:
+            stats.cow_copies = alloc.cow_copies
+            stats.evictions = alloc.evictions
+            alloc.check_conservation()
         self.last_stats = stats
         return {uid: np.asarray(toks, np.int32) for uid, toks in out.items()}
+
+    def _void_table_rows(self, cache, dead_slots):
+        drop = slots_lib.drop_id(self.num_pages)
+        cache = dict(cache)
+        rows = jnp.asarray(sorted(dead_slots), jnp.int32)
+        cache["table"] = cache["table"].at[rows].set(drop)
+        return cache
 
 
 # ---------------------------------------------------------------------------

@@ -82,14 +82,25 @@ class FIFOScheduler:
         )
         self._submitted += 1
 
-    def admit(self, now: int) -> List[Tuple[int, Request]]:
+    def admit(self, now: int, can_admit=None) -> List[Tuple[int, Request]]:
         """Assign arrived requests to free slots, FIFO, until one runs out.
+
+        ``can_admit(request)``, when given, gates each admission on a
+        resource the scheduler doesn't track (the engine passes the page
+        allocator's capacity check).  A False verdict **head-blocks**: the
+        loop stops rather than skipping to a later request, preserving
+        FIFO no-starvation — page pressure defers the whole queue, it
+        never reorders it.  When the callback returns True the pair IS
+        admitted (the engine uses this to commit page reservations, so
+        joint admissions can't race each other for the same free pages).
 
         Returns the new ``(slot, request)`` pairs; the engine must prefill
         each into its slot before the next pooled decode step.
         """
         out: List[Tuple[int, Request]] = []
         while self._free and self._queue and self._queue[0][0] <= now:
+            if can_admit is not None and not can_admit(self._queue[0][2]):
+                break  # head-block: FIFO order is never overtaken
             _, _, req = heapq.heappop(self._queue)
             slot = heapq.heappop(self._free)
             if slot in self._active:  # pragma: no cover - heap invariant

@@ -46,3 +46,32 @@ def poisson_trace(cfg, *, n_requests: int, prompt_len: int, lam: float,
             )
         )
     return reqs
+
+
+def shared_prefix_trace(cfg, *, n_requests: int, prefix_len: int,
+                        suffix_len: int, lam: float, new_lo: int,
+                        new_hi: int, seed: int = 0) -> List[Request]:
+    """The shared-system-prompt workload: every request's prompt is one
+    fixed ``prefix_len`` head (drawn once) + a per-request random
+    ``suffix_len`` tail.  With the engine's prefix cache the head's pages
+    are prefilled once and re-mapped by every later admission — the trace
+    ``benchmarks/servebench.py`` uses to measure weight passes saved and
+    TTFT won by prefix reuse (vs. the same trace served without sharing).
+    Decoder-only families (token prompts are the prefix carrier)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.poisson(lam, n_requests))
+    arrivals[0] = 0
+    prefix = rng.integers(0, cfg.vocab, (prefix_len,)).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        suffix = rng.integers(0, cfg.vocab, (suffix_len,)).astype(np.int32)
+        toks = np.concatenate([prefix, suffix])[None, :]
+        reqs.append(
+            Request(
+                uid=i,
+                tokens=toks,
+                max_new_tokens=int(rng.integers(new_lo, new_hi + 1)),
+                arrival=int(arrivals[i]),
+            )
+        )
+    return reqs

@@ -53,8 +53,9 @@ def test_plan_degrades_to_replication_on_host_mesh(arch):
 
 def test_pooled_serving_plan_keyed_by_slot_count():
     """plan_for(pool_slots=) plans the slot-pooled cache tree: structure
-    matches registry.init_pool_cache, lifted pos/len leaves are replicated
-    (tiny int32 bookkeeping), and the production mesh still validates."""
+    matches registry.init_pool_cache (paged since PR 6 — one span-sized
+    page per slot by default), pos/len/table leaves are replicated (tiny
+    int32 bookkeeping), and the production mesh still validates."""
     from repro.models import registry
 
     cfg = C.smoke_config("llama3-8b")
@@ -63,15 +64,41 @@ def test_pooled_serving_plan_keyed_by_slot_count():
                  meshes.make_abstract_mesh((16, 16), ("data", "model"))):
         plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=8)
         assert plan.pool_slots == 8
+        assert plan.page_size == 32 and plan.num_pages == 8
         pooled = jax.eval_shape(lambda: registry.init_pool_cache(cfg, 8, 32))
         assert (jax.tree_util.tree_structure(pooled)
                 == jax.tree_util.tree_structure(plan.cache))
-        assert plan.cache_abstract["pos"].shape == (8, 32)
+        # physical page store: 8 pages + the null page, per-slot tables
+        assert plan.cache_abstract["pos"].shape == (9, 32)
         assert plan.cache_abstract["len"].shape == (8,)
+        assert plan.cache_abstract["table"].shape == (8, 1)
         assert plan.cache["pos"] == P() and plan.cache["len"] == P()
+        assert plan.cache["table"] == P()
     with pytest.raises(planner.ShardingPlanError, match="pool_slots"):
         planner.plan_for(cfg, meshes.make_host_mesh(), shape=shape,
                          pool_slots=4)
+
+
+def test_pooled_serving_plan_keyed_by_page_geometry():
+    """Small pages re-key the cache plan: the k/v leaves become
+    (num_pages+1)-page physical stores and the resolved geometry is
+    recorded so PoolEngine can refuse a mismatched plan."""
+    from repro.models import registry
+
+    cfg = C.smoke_config("llama3-8b")
+    shape = C.ShapeConfig("serve", 32, 8, "decode")
+    plan = planner.plan_for(
+        cfg, meshes.make_host_mesh(), shape=shape, pool_slots=8, page_size=4
+    )
+    assert plan.page_size == 4 and plan.num_pages == 64
+    assert plan.cache_abstract["pos"].shape == (65, 4)
+    assert plan.cache_abstract["table"].shape == (8, 8)
+    pooled = jax.eval_shape(
+        lambda: registry.init_pool_cache(cfg, 8, 32, page_size=4)
+    )
+    assert (jax.tree_util.tree_structure(pooled)
+            == jax.tree_util.tree_structure(plan.cache))
+    assert all(isinstance(s, NamedSharding) for s in _leaf_shardings(plan))
 
 
 def test_plan_moe_decisions():

@@ -1,0 +1,281 @@
+"""Paged-KV allocator: host-side invariants, no model, no device arrays.
+
+Plain unit tests pin the mechanics (COW split geometry, double-free
+detection, LRU eviction order); the property section drives randomized
+admit / register-prefix / release traces through :class:`PageAllocator`
+and asserts the ISSUE-6 invariant set after every operation:
+
+* alloc/free conservation — free + live == num_pages, no page on the
+  free list and in a table (or the prefix cache) at once;
+* refcounts never negative and always equal the counted references;
+* double free raises instead of corrupting the free list;
+* prefix-share-then-COW isolation — COW destinations are fresh pages,
+  disjoint from their sources and from the shared head, so releasing the
+  borrower can never free the donor's pages.
+
+hypothesis is an optional dev dep (requirements-dev.txt; installed in
+CI); without it the same driver still runs on a fixed trace sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.slots import AdmissionPlan, PageAllocator, PageAllocatorError
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # degrade to the deterministic sweep only
+    hypothesis = None
+
+# nightly workflow raises the example budget via this multiplier
+_SCALE = max(1, int(__import__("os").environ.get("REPRO_HYPOTHESIS_SCALE", "1")))
+
+
+# ---------------------------------------------------------------------------
+# unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_dep_is_covering_chunk_end():
+    # page 0 of page_size 4 under chunk 3 is finished by the chunk ending
+    # at token 6; page 1 (tokens 4..7) by the chunk ending at 9.
+    assert PageAllocator.chunk_dep(0, 4, 3) == 6
+    assert PageAllocator.chunk_dep(1, 4, 3) == 9
+    assert PageAllocator.chunk_dep(0, 4, 4) == 4
+    assert PageAllocator.chunk_dep(2, 2, 8) == 8
+
+
+def test_plain_admission_and_release_conserve():
+    alloc = PageAllocator(num_pages=6, page_size=2, pages_per_slot=3,
+                          max_slots=2)
+    plan = alloc.plan_admission(None, 5, None)
+    assert (plan.shared, plan.cow, plan.fresh) == ([], [], 3)
+    alloc.admit(0, plan)
+    alloc.check_conservation()
+    assert alloc.pages_in_use() == 3 and alloc.free_pages() == 3
+    alloc.release_slot(0)
+    alloc.check_conservation()
+    assert alloc.pages_in_use() == 0 and alloc.free_pages() == 6
+
+
+def test_worst_case_page_count_clamps_to_slot_span():
+    alloc = PageAllocator(num_pages=8, page_size=2, pages_per_slot=3,
+                          max_slots=2)
+    assert alloc.plan_admission(None, 100, None).fresh == 3  # ring clamp
+    assert alloc.plan_admission(None, 1, None).fresh == 1
+
+
+def test_double_free_raises_and_conservation_catches_aliasing():
+    alloc = PageAllocator(num_pages=4, page_size=2, pages_per_slot=2,
+                          max_slots=2)
+    hold = alloc.reserve(alloc.plan_admission(None, 4, None))
+    alloc.bind(0, hold)
+    alloc.check_conservation()
+    # simulate an aliasing bug: the same reservation bound twice
+    alloc.bind(1, hold)
+    with pytest.raises(PageAllocatorError):
+        alloc.check_conservation()  # counted refs 2, stored 1
+    alloc.release_slot(0)
+    with pytest.raises(PageAllocatorError):
+        alloc.release_slot(1)  # second unref of a freed page
+
+
+def test_bind_occupied_slot_raises():
+    alloc = PageAllocator(num_pages=4, page_size=2, pages_per_slot=2,
+                          max_slots=1)
+    alloc.admit(0, alloc.plan_admission(None, 2, None))
+    with pytest.raises(PageAllocatorError):
+        alloc.admit(0, alloc.plan_admission(None, 2, None))
+
+
+def _admit_prompt(alloc, slot, prompt, chunk, need=None):
+    plan = alloc.plan_admission(prompt, need or len(prompt) + 1, chunk)
+    hold = alloc.admit(slot, plan)
+    return plan, hold
+
+
+def test_prefix_share_then_cow_isolation():
+    """A second request with the same prompt head maps the donor's
+    chunk-complete pages read-only and COW-copies the page it must append
+    into; the donor's pages survive the borrower's whole lifecycle."""
+    alloc = PageAllocator(num_pages=12, page_size=2, pages_per_slot=4,
+                          max_slots=3)
+    chunk = 2
+    prompt = np.arange(6, dtype=np.int32)  # 3 full pages
+    _admit_prompt(alloc, 0, prompt, chunk)
+    alloc.register_prefix(0, prompt, chunk)
+    donor_pages = list(alloc.tables[0])
+    alloc.check_conservation()
+
+    plan = alloc.plan_admission(prompt, len(prompt) + 2, chunk)
+    # resume lands at the last streamable chunk boundary (>=1 token left)
+    assert plan.resume == 4 and plan.hit_tokens == 4
+    assert plan.shared == donor_pages[:2]
+    assert [src for src, _ in plan.cow] == [donor_pages[2]]
+    hold = alloc.reserve(plan)
+    # COW dst is a fresh page, distinct from every donor page
+    assert set(hold["new"]).isdisjoint(donor_pages)
+    (src, dst) = hold["copies"][0]
+    assert src == donor_pages[2] and dst not in donor_pages
+    alloc.bind(1, hold)
+    alloc.check_conservation()
+
+    alloc.release_slot(1)
+    alloc.check_conservation()
+    # donor untouched: still holds its pages, shared refs dropped cleanly
+    assert alloc.tables[0] == donor_pages
+    alloc.release_slot(0)
+    alloc.check_conservation()
+    # prefix cache keeps the registered pages alive on its own ref
+    assert alloc.pages_in_use() == 3
+
+
+def test_page_aligned_prefix_has_no_cow():
+    """When resume coincides with the end of the hit chain no page is
+    appended into, so the plan is pure sharing."""
+    alloc = PageAllocator(num_pages=12, page_size=2, pages_per_slot=4,
+                          max_slots=3)
+    prompt = np.arange(5, dtype=np.int32)  # pages 0,1 full; resume == 4
+    _admit_prompt(alloc, 0, prompt, chunk=2)
+    alloc.register_prefix(0, prompt, 2)
+    plan = alloc.plan_admission(prompt, 7, 2)
+    assert plan.resume == 4 and plan.cow == []
+    assert len(plan.shared) == 2
+
+
+def test_prefix_mismatch_is_not_shared():
+    alloc = PageAllocator(num_pages=12, page_size=2, pages_per_slot=4,
+                          max_slots=3)
+    prompt = np.arange(6, dtype=np.int32)
+    _admit_prompt(alloc, 0, prompt, chunk=2)
+    alloc.register_prefix(0, prompt, 2)
+    other = prompt.copy()
+    other[0] += 1  # first token differs -> exact-content key misses
+    plan = alloc.plan_admission(other, 7, 2)
+    assert plan.resume == 0 and plan.shared == [] and plan.cow == []
+
+
+def test_lru_eviction_frees_oldest_idle_prefix_page():
+    alloc = PageAllocator(num_pages=2, page_size=2, pages_per_slot=1,
+                          max_slots=2)
+    chunk = 2
+    a = np.asarray([1, 2], np.int32)
+    b = np.asarray([3, 4], np.int32)
+    alloc.tick(0)
+    _admit_prompt(alloc, 0, a, chunk, need=2)
+    alloc.register_prefix(0, a, chunk)
+    alloc.release_slot(0)
+    alloc.tick(1)
+    _admit_prompt(alloc, 0, b, chunk, need=2)
+    alloc.register_prefix(0, b, chunk)
+    alloc.release_slot(0)
+    # both pages idle in the prefix cache; a third admission must evict
+    # exactly the older entry (a's page)
+    assert alloc.free_pages() == 0 and alloc.evictable_pages() == 2
+    alloc.tick(2)
+    plan = alloc.plan_admission(None, 2, None)
+    assert alloc.can_admit(alloc.fresh_needed(plan))
+    alloc.admit(0, plan)
+    assert alloc.evictions == 1
+    assert alloc.prefix_lookup(a, chunk) == []  # evicted
+    assert len(alloc.prefix_lookup(b, chunk)) == 1  # survived
+    alloc.check_conservation()
+
+
+def test_eviction_exhausted_raises():
+    alloc = PageAllocator(num_pages=2, page_size=2, pages_per_slot=2,
+                          max_slots=2)
+    alloc.admit(0, alloc.plan_admission(None, 4, None))
+    with pytest.raises(PageAllocatorError):
+        alloc.alloc(1)
+
+
+# ---------------------------------------------------------------------------
+# property tests: randomized allocator traces
+# ---------------------------------------------------------------------------
+
+
+def _drive(geometry, ops):
+    """Replay (kind, a, b) ops — admit / register-prefix / release — on a
+    PageAllocator, asserting the full invariant set after every one."""
+    page_size, pages_per_slot, max_slots, extra_pages = geometry
+    num_pages = pages_per_slot + extra_pages
+    alloc = PageAllocator(num_pages, page_size, pages_per_slot, max_slots)
+    chunk = page_size  # chunk == page keeps dep bounds simple; the unit
+    # tests above cover chunk != page splits
+    span = page_size * pages_per_slot
+    active = {}  # slot -> prompt
+    for step, (kind, a, b) in enumerate(ops):
+        alloc.tick(step)
+        if kind == 0:  # admit into the lowest free slot, if pool allows
+            free_slots = [s for s in range(max_slots) if not alloc.tables[s]]
+            if not free_slots:
+                continue
+            plen = 1 + a % span
+            prompt = np.asarray(
+                [(b + i) % 3 for i in range(plen)], np.int32
+            )
+            plan = alloc.plan_admission(prompt, min(plen + 1 + b, span), chunk)
+            protect = set(plan.shared) | {pid for pid, _ in plan.cow}
+            if not alloc.can_admit(alloc.fresh_needed(plan), protect):
+                continue
+            hold = alloc.reserve(plan)
+            # COW isolation: every newly-allocated page is disjoint from
+            # the shared head and from every COW source
+            assert set(hold["new"]).isdisjoint(protect)
+            for src, dst in hold["copies"]:
+                assert src != dst
+            alloc.bind(free_slots[0], hold)
+            active[free_slots[0]] = prompt
+        elif kind == 1 and active:  # publish a live slot's prefix
+            slot = sorted(active)[a % len(active)]
+            alloc.register_prefix(slot, active[slot], chunk)
+        elif kind == 2 and active:  # retire a live slot
+            slot = sorted(active)[a % len(active)]
+            alloc.release_slot(slot)
+            del active[slot]
+        alloc.check_conservation()
+        assert np.all(alloc.refcount >= 0)
+        assert alloc.pages_in_use() + alloc.free_pages() == num_pages
+    for slot in sorted(active):  # drain
+        alloc.release_slot(slot)
+    alloc.check_conservation()
+    # only prefix-cache refs may outlive the slots
+    assert alloc.pages_in_use() == len(alloc._prefix_of)
+
+
+FIXED_GEOMETRIES = [(2, 3, 2, 4), (1, 2, 3, 2), (4, 2, 2, 0)]
+FIXED_OPS = [
+    [],
+    [(0, 3, 0), (1, 0, 0), (2, 0, 0), (0, 3, 0)],
+    [(0, i % 5, i % 4) for i in range(12)],
+    [(i % 3, i, i) for i in range(30)],
+    [(0, 5, 1), (1, 0, 0), (0, 5, 1), (2, 0, 0), (0, 5, 1), (1, 1, 0),
+     (2, 0, 0), (2, 0, 0), (0, 2, 2), (0, 5, 1)],
+]
+
+
+@pytest.mark.parametrize("geometry", FIXED_GEOMETRIES)
+@pytest.mark.parametrize("ops", FIXED_OPS)
+def test_allocator_invariants_fixed_traces(geometry, ops):
+    _drive(geometry, ops)
+
+
+if hypothesis is not None:
+
+    @hypothesis.given(
+        geometry=st.tuples(
+            st.integers(1, 4),   # page_size
+            st.integers(1, 4),   # pages_per_slot
+            st.integers(1, 3),   # max_slots
+            st.integers(0, 8),   # extra pages beyond one slot's worth
+        ),
+        ops=st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, 15),
+                      st.integers(0, 7)),
+            min_size=0, max_size=40,
+        ),
+    )
+    @hypothesis.settings(deadline=None, max_examples=80 * _SCALE)
+    def test_allocator_invariants(geometry, ops):
+        _drive(geometry, ops)

@@ -109,6 +109,52 @@ def test_prefilling_retire_and_reuse():
     assert s.all_done()
 
 
+def test_can_admit_gates_and_head_blocks():
+    """A False verdict from ``can_admit`` stops the admission loop at the
+    queue head — later requests never overtake (FIFO no-starvation under
+    page pressure); a True verdict IS the admission (the engine commits
+    page reservations inside the callback)."""
+    s = FIFOScheduler(3)
+    for i in range(3):
+        s.submit(_req(i))
+    assert s.admit(now=0, can_admit=lambda r: False) == []
+    assert s.num_active == 0 and s.num_queued == 3
+    # head allowed, the rest denied: exactly one admission, in order
+    got = s.admit(now=0, can_admit=lambda r: r.uid == 0)
+    assert [r.uid for _, r in got] == [0]
+    # pressure released: the remaining queue drains FIFO
+    got = s.admit(now=0, can_admit=lambda r: True)
+    assert [r.uid for _, r in got] == [1, 2]
+    s.check_conservation()
+
+
+def test_can_admit_commit_semantics_prevent_joint_overbooking():
+    """Back-to-back verdicts within ONE admit call see earlier commitments
+    — mirroring the engine's reserve-in-callback pattern, where a shared
+    page budget must not be handed to two head requests at once."""
+    s = FIFOScheduler(4)
+    for i in range(4):
+        s.submit(_req(i, max_new=1))
+    budget = 2
+    committed = [0]
+
+    def cb(req):
+        if committed[0] < budget:
+            committed[0] += 1  # commit, exactly like alloc.reserve()
+            return True
+        return False
+
+    got = s.admit(now=0, can_admit=cb)
+    assert [r.uid for _, r in got] == [0, 1]  # budget-bounded, FIFO
+    assert s.num_active == 2 and s.num_queued == 2
+    for slot, _ in got:
+        s.retire(slot)
+        committed[0] -= 1
+    got = s.admit(now=0, can_admit=cb)
+    assert [r.uid for _, r in got] == [2, 3]
+    s.check_conservation()
+
+
 def test_pending_arrivals_snapshot():
     s = FIFOScheduler(1)
     s.submit(_req("a", arrival=3))
