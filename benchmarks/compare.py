@@ -18,9 +18,13 @@ servebench (exactly reproducible for the fixed smoke trace):
   - live paged-KV HBM bytes per emitted token, the prefix-cache hit
     rate, and the weight passes saved by prefix sharing on the
     shared-system-prompt trace (PR 6 paged counters)
+  - weight passes and tokens-per-weight-pass of the speculative engines
+    (``spec_on`` / ``spec_on_prefix`` — low-bit self-draft riding the
+    paged chunked engine on both traces)
   It also re-asserts the cross-engine invariants (pool < lockstep steps;
   chunked < solo-prefill passes and TTFT; small pages < page=span KV
-  bytes/token; prefix sharing < unshared passes and TTFT), so a
+  bytes/token; prefix sharing < unshared passes and TTFT; speculation <
+  spec-off passes with >1 token per pass on both traces), so a
   regression can't slip in by moving baseline and current together.
 
 kernelbench (dimensionless, machine-normalized):
@@ -66,6 +70,11 @@ SERVE_COUNTERS = [
     ("prefix_on.kv_hbm_bytes_per_token", True),
     ("prefix_on.prefix_hit_rate", False),
     ("prefix_weight_passes_saved", False),
+    ("spec_on.weight_passes", True),
+    ("spec_on.accepted_tokens_per_weight_pass", False),
+    ("spec_on_prefix.weight_passes", True),
+    ("spec_on_prefix.accepted_tokens_per_weight_pass", False),
+    ("spec_weight_passes_saved", False),
 ]
 
 #: wall-clock servebench fields (higher is better) — warn only
@@ -87,7 +96,7 @@ def _get(d, path):
 def compare_servebench(base, cur, tol):
     failures, warnings = [], []
     setup = ("trace", "prefix_trace", "requests", "slots", "prefill_chunk",
-             "page_size")
+             "page_size", "spec")
     if any(base.get(k) != cur.get(k) for k in setup):
         failures.append(
             "servebench setup mismatch: baseline and current ran different "
@@ -139,6 +148,21 @@ def compare_servebench(base, cur, tol):
             "servebench: prefix sharing no longer reduces mean TTFT "
             "on the shared-system-prompt trace"
         )
+    # speculation must be strictly better than its spec-off twin on BOTH
+    # traces: fewer full-policy weight passes, ratio above one
+    for spec_path, off_path in (("spec_on", "pool_paged"),
+                                ("spec_on_prefix", "prefix_on")):
+        if (_get(cur, f"{spec_path}.weight_passes")
+                >= _get(cur, f"{off_path}.weight_passes")):
+            failures.append(
+                f"servebench: {spec_path} no longer reduces weight passes "
+                f"vs {off_path} — speculation saves nothing"
+            )
+        if _get(cur, f"{spec_path}.accepted_tokens_per_weight_pass") <= 1.0:
+            failures.append(
+                f"servebench: {spec_path} emits <= 1 token per weight "
+                "pass — speculation no longer amortizes weight streaming"
+            )
     for path in SERVE_WALLCLOCK:
         b, c = float(_get(base, path)), float(_get(cur, path))
         if b > 0 and (b - c) / b > tol:

@@ -28,6 +28,16 @@ re-streaming them, so ``prefix_on`` must show strictly fewer weight
 passes and lower mean TTFT at a nonzero ``prefix_hit_rate`` — all
 deterministic, all gated.
 
+Both traces also replay through the paged chunked engine with low-bit
+self-draft speculative decoding (``spec_on`` / ``spec_on_prefix``,
+serve/spec.py): the same weights re-quantized to ``--spec-bits`` draft up
+to ``--spec-draft`` tokens per slot, one ``verify_step`` weight pass
+scores them all, and greedy acceptance keeps the outputs bit-identical
+to the spec-off twins.  Gated: strictly fewer ``weight_passes`` than the
+spec-off engine on BOTH traces, and ``accepted_tokens_per_weight_pass``
+strictly above 1.0 (speculation must amortize weight streaming below one
+full pass per emitted token).
+
 Deterministic metrics (exactly reproducible for a fixed trace — the CI
 gate, compared against the committed ``BENCH_servebench.json`` baseline
 by ``benchmarks/compare.py``):
@@ -46,6 +56,10 @@ by ``benchmarks/compare.py``):
 * ``prefix_hit_rate`` / ``prefix_weight_passes_saved`` — fraction of
   prompt tokens served from shared prefix pages, and the whole
   weight-streaming passes that sharing removed vs the unshared run.
+* ``accepted_tokens_per_weight_pass`` — emitted tokens per full-policy
+  weight pass on the spec engines (>1.0 means accepted drafts amortized
+  weight streaming), with ``accepted_tokens`` / ``draft_weight_passes``
+  breaking out the accept volume and the low-bit draft cost.
 
 Wall-clock tokens/sec is reported but only warned on (shared CI runners
 are noisy).
@@ -67,16 +81,17 @@ from repro import configs as C
 from repro.core.policy import PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
 from repro.serve import (
-    PoolEngine, lockstep_generate, poisson_trace, shared_prefix_trace,
+    LowBitSelfDraft, PoolEngine, lockstep_generate, poisson_trace,
+    shared_prefix_trace,
 )
 
 
 def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
-             page_size=None, prefix_cache=False):
+             page_size=None, prefix_cache=False, spec=None):
     eng = PoolEngine(
         cfg, PAPER_FAITHFUL, params, max_slots=slots, max_len=max_len,
         prefill_chunk=prefill_chunk, page_size=page_size,
-        prefix_cache=prefix_cache,
+        prefix_cache=prefix_cache, spec=spec,
     )
     eng.run(reqs[:1])  # warmup: compile prefill + decode/chunk step
     t0 = time.perf_counter()
@@ -95,6 +110,16 @@ def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
         "ttft_passes": {str(k): v for k, v in sorted(st.ttft_passes.items())},
         "mean_occupancy": st.mean_occupancy,
     }
+    if spec is not None:
+        # speculative-decoding economics: tokens emitted per full-policy
+        # weight pass is THE headline number — >1.0 means speculation
+        # amortized weight streaming below one pass per token
+        row.update({
+            "accepted_tokens": st.accepted_tokens,
+            "draft_weight_passes": st.draft_weight_passes,
+            "accepted_tokens_per_weight_pass":
+                st.accepted_tokens_per_weight_pass,
+        })
     if st.page_size:
         # deterministic paged-memory counters (ISSUE-6): live-KV HBM
         # footprint per emitted token and the prefix-cache economics
@@ -179,6 +204,10 @@ def main(argv=None):
                     help="shared system-prompt length for the prefix trace")
     ap.add_argument("--suffix-len", type=int, default=4,
                     help="per-request unique suffix for the prefix trace")
+    ap.add_argument("--spec-draft", type=int, default=3,
+                    help="max draft tokens/slot for the spec_on engines")
+    ap.add_argument("--spec-bits", type=int, default=3,
+                    help="self-draft quantization bit-width")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write results JSON here")
     ap.add_argument("--no-check", action="store_true",
@@ -220,6 +249,21 @@ def main(argv=None):
         prefill_chunk=chunk, page_size=args.page_size, prefix_cache=True,
     )
 
+    # speculative decoding: the paged chunked engine + low-bit self-draft
+    # on BOTH traces, vs its spec-off twin (pool_paged / prefix_on).
+    # Greedy acceptance keeps the outputs bit-identical, so the only
+    # thing speculation may change is the weight-pass count — gated below.
+    drafter = LowBitSelfDraft(max_draft=args.spec_draft, bits=args.spec_bits)
+    spec_on, spec_out = run_pool(
+        cfg, params, reqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size, spec=drafter,
+    )
+    spec_on_prefix, spec_prefix_out = run_pool(
+        cfg, params, preqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size, prefix_cache=True,
+        spec=drafter,
+    )
+
     speedup = pool["tokens_per_s"] / lock["tokens_per_s"]
     result = {
         "arch": cfg.name,
@@ -241,24 +285,34 @@ def main(argv=None):
         "lockstep": lock,
         "prefix_off": prefix_off,
         "prefix_on": prefix_on,
+        "spec": {"max_draft": args.spec_draft, "bits": args.spec_bits},
+        "spec_on": spec_on,
+        "spec_on_prefix": spec_on_prefix,
+        "spec_weight_passes_saved":
+            paged["weight_passes"] - spec_on["weight_passes"],
         "prefix_weight_passes_saved":
             prefix_off["weight_passes"] - prefix_on["weight_passes"],
         "speedup_tokens_per_s": speedup,
     }
-    hdr = (f"{'engine':<14}{'tok/s':>10}{'steps':>8}{'passes':>8}"
-           f"{'ttft':>7}{'occupancy':>11}{'KV B/tok':>10}{'hit':>6}")
+    hdr = (f"{'engine':<15}{'tok/s':>10}{'steps':>8}{'passes':>8}"
+           f"{'ttft':>7}{'occupancy':>11}{'KV B/tok':>10}{'hit':>6}"
+           f"{'tok/pass':>9}")
     print(hdr)
     for name, row in (("pool", pool), ("pool_chunked", chunked),
                       ("pool_paged", paged), ("lockstep", lock),
-                      ("prefix_off", prefix_off), ("prefix_on", prefix_on)):
-        print(f"{name:<14}{row['tokens_per_s']:>10.1f}"
+                      ("prefix_off", prefix_off), ("prefix_on", prefix_on),
+                      ("spec_on", spec_on),
+                      ("spec_on_prefix", spec_on_prefix)):
+        print(f"{name:<15}{row['tokens_per_s']:>10.1f}"
               f"{row['decode_steps']:>8}{row['weight_passes']:>8}"
               f"{row.get('mean_ttft_passes', float('nan')):>7.2f}"
               f"{row['mean_occupancy']:>11.2f}"
               f"{row.get('kv_hbm_bytes_per_token', float('nan')):>10.1f}"
-              f"{row.get('prefix_hit_rate', float('nan')):>6.2f}")
+              f"{row.get('prefix_hit_rate', float('nan')):>6.2f}"
+              f"{row.get('accepted_tokens_per_weight_pass', float('nan')):>9.2f}")
     print(f"speedup (pool/lockstep): {speedup:.2f}x  "
-          f"prefix passes saved: {result['prefix_weight_passes_saved']}")
+          f"prefix passes saved: {result['prefix_weight_passes_saved']}  "
+          f"spec passes saved: {result['spec_weight_passes_saved']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
@@ -317,6 +371,31 @@ def main(argv=None):
                 f" passes >= {prefix_off['mean_ttft_passes']:.2f} without — "
                 "skipping shared chunks did not cut first-token latency"
             )
+        if spec_out != paged_out:
+            raise SystemExit(
+                "spec_on emitted different tokens than pool_paged — greedy "
+                "speculation broke bit-identity on the Poisson trace"
+            )
+        if spec_prefix_out != on_out:
+            raise SystemExit(
+                "spec_on_prefix emitted different tokens than prefix_on — "
+                "speculation broke bit-identity on the shared-prefix trace"
+            )
+        for name, on, off in (("spec_on", spec_on, paged),
+                              ("spec_on_prefix", spec_on_prefix, prefix_on)):
+            if on["weight_passes"] >= off["weight_passes"]:
+                raise SystemExit(
+                    f"{name} took {on['weight_passes']} weight passes vs "
+                    f"{off['weight_passes']} without speculation — no "
+                    "accepted draft ever saved a pass"
+                )
+            if on["accepted_tokens_per_weight_pass"] <= 1.0:
+                raise SystemExit(
+                    f"{name} emitted "
+                    f"{on['accepted_tokens_per_weight_pass']:.2f} tokens "
+                    "per weight pass — speculation must amortize weight "
+                    "streaming strictly below one pass per token"
+                )
         if speedup <= 1.0:
             print(f"WARNING: wall-clock speedup {speedup:.2f}x <= 1 "
                   "despite fewer decode steps (noisy runner?)")

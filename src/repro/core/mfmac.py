@@ -188,7 +188,23 @@ def mf_linear(
 ) -> jax.Array:
     """Quantized (or plain, if policy.enabled=False) linear projection."""
     if not policy.enabled:
-        return jnp.dot(a, w.astype(a.dtype))
+        w_ = w.astype(a.dtype)
+        if a.ndim == 3 and a.shape[1] == 1:
+            # Decode-shaped (B, 1, D) rows: XLA's matmul strategy is
+            # M-dependent, so a plain dot's last-ulp reduction order
+            # changes with the batch size — breaking the serving stack's
+            # batch-invariance on the raw-FP32 path.  A per-row map runs
+            # the SAME (1, D) @ (D, N) program for every batch size,
+            # making the reduction row-independent by construction (the
+            # quantized path gets this from the tiling-invariant
+            # kernels).  Decode batches are pool-sized, so the map adds
+            # no meaningful cost; training shapes (S > 1) keep the fast
+            # fused dot.
+            return jax.lax.map(
+                lambda r: jnp.dot(r, w_,
+                                  precision=jax.lax.Precision.HIGHEST), a
+            )
+        return jnp.dot(a, w_, precision=jax.lax.Precision.HIGHEST)
     if gamma is None:
         gamma = jnp.float32(policy.ratio_clip_init or 1.0)
     return _mf_linear(policy, is_last, a, w, gamma)
@@ -284,7 +300,8 @@ def mf_expert_linear(
 ) -> jax.Array:
     if not policy.enabled:
         return jax.lax.dot_general(
-            a, w.astype(a.dtype), (((2,), (1,)), ((0,), (0,)))
+            a, w.astype(a.dtype), (((2,), (1,)), ((0,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,  # batch-invariant FP32
         )
     if gamma is None:
         gamma = jnp.float32(policy.ratio_clip_init or 1.0)
@@ -335,8 +352,44 @@ _mf_act_dot.defvjp(_mf_act_dot_fwd, _mf_act_dot_bwd)
 
 def mf_act_dot(x: jax.Array, y: jax.Array, dn, *, policy: QuantPolicy) -> jax.Array:
     """Quantized activation-by-activation dot_general (attention scores/PV)."""
-    if not (policy.enabled and policy.quantize_attention):
-        return jax.lax.dot_general(x, y, dn, preferred_element_type=jnp.float32).astype(x.dtype)
+    if not policy.enabled:
+        # Fully-disabled raw-FP32 baseline only (NOT merely
+        # quantize_attention=False: the enabled policies get their
+        # batch-invariance from bf16-snapped operands and must keep the
+        # fused dot — a per-row map would serialize the batch on real
+        # hardware and blow up the dryrun cost model at scale).
+        (cx, cy), (bx, by) = dn
+        if (x.ndim >= 3 and x.shape[-2] == 1 and bx and by
+                and bx[0] == 0 and by[0] == 0):
+            # Decode-shaped attention (one query row per batch element,
+            # both operands batched over axis 0): XLA fuses these dots
+            # into the surrounding softmax/mask graph with
+            # batch-size-dependent reduction splits, so the last ulps of
+            # a row change with the pool size.  Mapping over the batch
+            # runs the SAME per-sample program for every batch size —
+            # row-independent by construction, like the quantized
+            # kernels.  Training/prefill shapes keep the fused dot.
+            dn1 = (
+                (tuple(c - 1 for c in cx), tuple(c - 1 for c in cy)),
+                (tuple(b - 1 for b in bx[1:]), tuple(b - 1 for b in by[1:])),
+            )
+            out = jax.lax.map(
+                lambda xy: jax.lax.dot_general(
+                    xy[0], xy[1], dn1, preferred_element_type=jnp.float32,
+                    precision=jax.lax.Precision.HIGHEST,
+                ),
+                (x, y),
+            )
+            return out.astype(x.dtype)
+        return jax.lax.dot_general(
+            x, y, dn, preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,  # batch-invariant FP32
+        ).astype(x.dtype)
+    if not policy.quantize_attention:
+        # enabled policy, unquantized attention — seed-exact fused dot
+        return jax.lax.dot_general(
+            x, y, dn, preferred_element_type=jnp.float32
+        ).astype(x.dtype)
     return _mf_act_dot(policy, dn, x, y)
 
 

@@ -77,6 +77,37 @@ class QuantPolicy:
         raise ValueError(f"unknown tensor kind {tensor!r}")
 
 
+def draft_policy(policy: QuantPolicy, bits: int = 3) -> QuantPolicy:
+    """Derive the low-bit *self-draft* policy from a serving policy.
+
+    Speculative decoding (serve/spec.py) drafts with the *same* weights at
+    2-3 PoT bits: the ALS-PoTQ policy already parameterizes bit-widths, so
+    the draft pass is just the serving policy with ``bits_w``/``bits_a``
+    narrowed.  ``weights_prequantized`` is cleared because serving weights
+    are stored as exact ``bits_w``-bit PoT values — re-quantizing them down
+    to ``bits`` at use is exactly the cheap draft the paper's scheme admits
+    (drafts never need to be exact; the full-precision-policy verify pass
+    does).
+
+    Drafting at the serving bit-width (or for a disabled/FP policy) is a
+    usage error: the draft would cost as much as the verify pass.
+    """
+    if not policy.enabled:
+        raise ValueError(
+            "draft_policy requires a quantized serving policy "
+            "(policy.enabled=True); an FP baseline has no cheaper "
+            "bit-width to draft at"
+        )
+    if not 2 <= bits < min(policy.bits_w, policy.bits_a):
+        raise ValueError(
+            f"draft bits must be in [2, min(bits_w, bits_a)) = "
+            f"[2, {min(policy.bits_w, policy.bits_a)}); got {bits}"
+        )
+    return dataclasses.replace(
+        policy, bits_w=bits, bits_a=bits, weights_prequantized=False
+    )
+
+
 #: The paper's training scheme (Algorithm 1).
 PAPER_FAITHFUL = QuantPolicy()
 

@@ -417,6 +417,155 @@ def decode_step(cfg, policy, params, token, cache):
     return logits, new_cache
 
 
+def verify_step(cfg, policy, params, tokens, n_new, cache):
+    """Speculative-decoding verifier, encdec edition: score ``n_new[b]``
+    candidate tokens per slot in one decoder weight pass, bit-identical to
+    sequential :func:`decode_step` calls.  Same construction as
+    ``transformer.verify_step`` (outer layer scan, inner Python loop over
+    the C positions running decode's exact ``(B, 1, D)`` ops — including
+    the per-position cross-attention read of the slot's encoder K/V — and
+    a per-position final norm + tied LM head).  Slot-pooled and paged
+    caches only; encdec is never windowed.  Returns (logits (B, C, V),
+    new cache with ``len = len + n_new``)."""
+    from repro.models.transformer import _page_view, _sdpa
+
+    b, c = tokens.shape
+    hd = cfg.head_dim
+    pos0 = cache["len"]
+    assert pos0.ndim == 1, "verify_step requires the slot-pooled cache layout"
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        npg = table.shape[1]
+        span = npg * page
+        drop = cache["pos"].shape[0]
+    else:
+        span = cache["k"].shape[2]
+    assert c <= span, (c, span)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
+    rows = jnp.arange(b)
+    offs = jax.lax.iota(jnp.int32, c)
+    valid = offs[None, :] < n_new[:, None]
+    gpos = pos0[:, None] + offs[None, :]
+    qpos = jnp.where(valid, gpos, -1)
+    lo = gpos % span
+    kpos_phys = cache["pos"]
+    kpos_views, dests, loffs, sidxs = [], [], [], []
+    if paged:
+        table_ext = jnp.concatenate(
+            [table, jnp.full((b, 1), drop, table.dtype)], axis=1
+        )
+        lpage = jnp.where(valid, lo // page, npg)
+        loff_all = lo % page
+    else:
+        sidx_all = jnp.where(valid, lo, span)
+    for i in range(c):
+        if paged:
+            dest_i = jnp.take_along_axis(
+                table_ext, lpage[:, i:i + 1], axis=1
+            )[:, 0]
+            dests.append(dest_i)
+            loffs.append(loff_all[:, i])
+            kpos_phys = kpos_phys.at[dest_i, loff_all[:, i]].set(
+                qpos[:, i], mode="drop"
+            )
+            kpos_views.append(_page_view(kpos_phys, table, span))
+        else:
+            sidxs.append(sidx_all[:, i])
+            kpos_phys = kpos_phys.at[rows, sidx_all[:, i]].set(
+                qpos[:, i], mode="drop"
+            )
+            kpos_views.append(kpos_phys)
+    se = cache["ck"].shape[2]
+    epos = jax.lax.iota(jnp.int32, se)
+
+    def body(carry, lp_kv):
+        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        outs = []
+        for i in range(c):
+            xi = carry[:, i:i + 1, :]
+            h = common.layer_norm(xi, lp["ln1"]["scale"], lp["ln1"]["bias"])
+            q = _proj_heads(lp, "wq", h, policy, b, 1, cfg.n_heads, hd)
+            k = _proj_heads(lp, "wk", h, policy, b, 1, cfg.kv_heads, hd)
+            v = _proj_heads(lp, "wv", h, policy, b, 1, cfg.kv_heads, hd)
+            pq = qpos[:, i:i + 1]  # (B, 1)
+            q = common.rope(q, pq, cfg.rope_theta)
+            k = common.rope(k, pq, cfg.rope_theta)
+            if paged:
+                ck_self = ck_self.at[dests[i], loffs[i]].set(
+                    k[:, 0].astype(ck_self.dtype), mode="drop"
+                )
+                cv_self = cv_self.at[dests[i], loffs[i]].set(
+                    v[:, 0].astype(cv_self.dtype), mode="drop"
+                )
+                kview = _page_view(ck_self, table, span).astype(q.dtype)
+                vview = _page_view(cv_self, table, span).astype(q.dtype)
+            else:
+                ck_self = ck_self.at[rows, sidxs[i]].set(
+                    k[:, 0].astype(ck_self.dtype), mode="drop"
+                )
+                cv_self = cv_self.at[rows, sidxs[i]].set(
+                    v[:, 0].astype(cv_self.dtype), mode="drop"
+                )
+                kview = ck_self.astype(q.dtype)
+                vview = cv_self.astype(q.dtype)
+            att = _sdpa(cfg, policy, q, kview, vview, pq, kpos_views[i],
+                        None)
+            y = xi + mfmac.mf_linear(
+                att.reshape(b, 1, cfg.n_heads * hd), lp["wo"]["w"],
+                lp["wo"]["gamma"], policy=policy,
+            )
+            hc = common.layer_norm(y, lp["ln_cross"]["scale"],
+                                   lp["ln_cross"]["bias"])
+            cq = _proj_heads(lp, "cq", hc, policy, b, 1, cfg.n_heads, hd)
+            catt = _mha(
+                cfg, policy, cq, ck_x.astype(cq.dtype),
+                cv_x.astype(cq.dtype), pq, epos, causal=False,
+            )
+            y = y + mfmac.mf_linear(
+                catt.reshape(b, 1, cfg.n_heads * hd), lp["co"]["w"],
+                lp["co"]["gamma"], policy=policy,
+            )
+            h2 = common.layer_norm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+            m = common.gelu(
+                mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"],
+                                policy=policy)
+            )
+            y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"],
+                                    policy=policy)
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1), (ck_self, cv_self)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
+         cache["cv"]),
+    )
+    import dataclasses as _dc
+
+    _pol2 = (_dc.replace(policy, weights_prequantized=False)
+             if policy.weights_prequantized else policy)
+    w = params["embed"].T
+    logits = []
+    for i in range(c):
+        xe = common.layer_norm(
+            x[:, i:i + 1, :], params["dec_norm"]["scale"],
+            params["dec_norm"]["bias"],
+        )
+        logits.append(mfmac.mf_linear(
+            xe, w, jnp.float32(policy.ratio_clip_init or 1.0), policy=_pol2,
+            is_last=True,
+        )[:, 0, :])
+    logits = jnp.stack(logits, axis=1)  # (B, C, V)
+    new_cache = dict(cache)
+    new_cache["k"] = nk
+    new_cache["v"] = nv
+    new_cache["pos"] = kpos_phys
+    new_cache["len"] = pos0 + n_new
+    return logits, new_cache
+
+
 def encode_cross_kv(cfg, policy, params, frames):
     """Encoder pass + per-decoder-layer cross-attention K/V for chunked
     admission (serve/engine.py): the encoder side of prefill without

@@ -80,6 +80,12 @@ POOLED_FAMILIES = ("decoder", "vlm", "encdec", "ssm", "hybrid")
 #: prefill instead.
 CHUNKED_FAMILIES = ("decoder", "vlm", "encdec")
 
+#: Families with a speculative-decoding ``verify_step`` (serve/spec.py):
+#: one weight pass scoring C candidate tokens per slot, bit-identical to
+#: C sequential ``decode_step`` calls.  Same set as CHUNKED_FAMILIES —
+#: ssm/hybrid recurrences decode one position at a time.
+SPEC_FAMILIES = ("decoder", "vlm", "encdec")
+
 #: Families whose pool cache is block-table **paged** (serve/slots.py):
 #: fixed-size KV pages gathered through per-slot page tables inside the
 #: step bodies.  ssm/hybrid recurrent state is O(1) in sequence length —
@@ -171,6 +177,26 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     raise NotImplementedError(
         f"family {cfg.family!r} has no fused chunk step "
         f"(supported: {CHUNKED_FAMILIES})"
+    )
+
+
+def verify_step(cfg, policy, params, tokens, n_new, cache):
+    """Speculative-decoding verifier: score each slot's ``n_new[b]``-token
+    verify row (last emitted token + draft candidates) in ONE weight
+    pass, bit-identical to sequential ``decode_step`` calls (unlike
+    ``chunk_step``, whose per-slot (C, D) activation-scale groups are
+    not).  Returns (logits (B, C, V) — position i scores the successor
+    of ``tokens[b, i]`` — and the new pooled cache with
+    ``len += n_new``).  Slot-pooled caches only (serve/spec.py owns
+    acceptance and rollback)."""
+    if cfg.family in ("decoder", "vlm"):
+        return transformer.verify_step(cfg, policy, params, tokens, n_new,
+                                       cache)
+    if cfg.family == "encdec":
+        return encdec.verify_step(cfg, policy, params, tokens, n_new, cache)
+    raise NotImplementedError(
+        f"family {cfg.family!r} has no speculative verify step "
+        f"(supported: {SPEC_FAMILIES})"
     )
 
 

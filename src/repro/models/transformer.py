@@ -732,3 +732,158 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     if paged:
         new_cache["table"] = table
     return logits, new_cache
+
+
+def verify_step(cfg, policy, params, tokens, n_new, cache):
+    """Score ``n_new[b]`` candidate tokens per slot in ONE weight pass,
+    bit-identically to ``n_new[b]`` sequential ``decode_step`` calls — the
+    speculative-decoding verifier (serve/spec.py).
+
+    ``chunk_step`` cannot be the verifier: it quantizes each slot's chunk
+    as one ``(C, D)`` activation-scale group, so a multi-token row shares
+    one amax across positions and its logits differ from sequential
+    decode's in the last bit.  This step instead streams the weights once
+    (the outer layer scan) and replays decode's exact per-position ops in
+    an inner Python loop over the C positions: every projection /
+    attention / MLP runs on a ``(B, 1, D)`` slice with decode's own
+    ``(1, D)`` scale groups, position i's K/V scatter lands before
+    position i+1's attention, and the final norm + LM head run per
+    position.  The op-for-op dataflow DAG is decode's with the layer and
+    position loops interchanged — same values, reduced in the same order,
+    so the result is bit-identical by construction on every backend and
+    cache layout (including windowed rings, where the sequential
+    write-then-attend per position reproduces decode's eviction order
+    exactly; the strict ``kpos > qpos - window`` mask means the slot a
+    write evicts was already outside its own and every later window).
+
+    ``tokens[b, :n_new[b]]`` is the verify row: the slot's last emitted
+    token followed by the draft candidates.  Positions past ``n_new[b]``
+    are padding exactly as in ``chunk_step`` (qpos -1, scatters dropped
+    out of bounds, activations quarantined in their own scale group).
+
+    Returns (logits ``(B, C, V)`` — position i scores the token *after*
+    ``tokens[b, i]`` — and the new cache with ``len = len + n_new``).
+    The caller owns acceptance and the rollback of rejected positions
+    (serve/slots.py spec_snapshot/spec_restore).
+    """
+    b, c = tokens.shape
+    pos0 = cache["len"]
+    assert pos0.ndim == 1, "verify_step requires the slot-pooled cache layout"
+    paged = "table" in cache
+    if paged:
+        table = cache["table"]  # (B, n)
+        page = cache["pos"].shape[1]
+        npg = table.shape[1]
+        span = npg * page
+        drop = cache["pos"].shape[0]  # num_pages + 1 == slots.drop_id
+    else:
+        span = cache["k"].shape[2]
+    assert c <= span, (c, span)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, C, D)
+    rows = jnp.arange(b)
+    offs = jax.lax.iota(jnp.int32, c)
+    valid = offs[None, :] < n_new[:, None]  # (B, C)
+    gpos = pos0[:, None] + offs[None, :]
+    qpos = jnp.where(valid, gpos, -1)
+    lo = gpos % span
+    # Per-position write targets (decode_step's, one column per position;
+    # pads scatter out of bounds and drop).  kpos is written position by
+    # position so position i's attention sees exactly the pos view
+    # sequential decode would.
+    kpos_phys = cache["pos"]
+    kpos_views, dests, loffs, sidxs = [], [], [], []
+    if paged:
+        table_ext = jnp.concatenate(
+            [table, jnp.full((b, 1), drop, table.dtype)], axis=1
+        )
+        lpage = jnp.where(valid, lo // page, npg)
+        loff_all = lo % page
+    else:
+        sidx_all = jnp.where(valid, lo, span)
+    for i in range(c):
+        if paged:
+            dest_i = jnp.take_along_axis(
+                table_ext, lpage[:, i:i + 1], axis=1
+            )[:, 0]
+            dests.append(dest_i)
+            loffs.append(loff_all[:, i])
+            kpos_phys = kpos_phys.at[dest_i, loff_all[:, i]].set(
+                qpos[:, i], mode="drop"
+            )
+            kpos_views.append(_page_view(kpos_phys, table, span))
+        else:
+            sidxs.append(sidx_all[:, i])
+            kpos_phys = kpos_phys.at[rows, sidx_all[:, i]].set(
+                qpos[:, i], mode="drop"
+            )
+            kpos_views.append(kpos_phys)
+
+    def carry_block(carry, lp_kv):
+        lp, ck, cv = lp_kv
+        outs = []
+        for i in range(c):
+            xi = carry[:, i:i + 1, :]  # (B, 1, D) — decode's input shape
+            h = common.apply_norm(cfg.norm, xi, lp["ln1"])
+            q = mfmac.mf_linear(h, lp["wq"]["w"], lp["wq"]["gamma"],
+                                policy=policy)
+            k = mfmac.mf_linear(h, lp["wk"]["w"], lp["wk"]["gamma"],
+                                policy=policy)
+            v = mfmac.mf_linear(h, lp["wv"]["w"], lp["wv"]["gamma"],
+                                policy=policy)
+            q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            k = k.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
+            v = v.reshape(b, 1, cfg.kv_heads, cfg.head_dim)
+            pq = qpos[:, i:i + 1]  # (B, 1)
+            q = common.rope(q, pq, cfg.rope_theta)
+            k = common.rope(k, pq, cfg.rope_theta)
+            if paged:
+                ck = ck.at[dests[i], loffs[i]].set(
+                    k[:, 0].astype(ck.dtype), mode="drop"
+                )
+                cv = cv.at[dests[i], loffs[i]].set(
+                    v[:, 0].astype(cv.dtype), mode="drop"
+                )
+                kview = _page_view(ck, table, span).astype(q.dtype)
+                vview = _page_view(cv, table, span).astype(q.dtype)
+            else:
+                ck = ck.at[rows, sidxs[i]].set(
+                    k[:, 0].astype(ck.dtype), mode="drop"
+                )
+                cv = cv.at[rows, sidxs[i]].set(
+                    v[:, 0].astype(cv.dtype), mode="drop"
+                )
+                kview, vview = ck.astype(q.dtype), cv.astype(q.dtype)
+            att = _sdpa(cfg, policy, q, kview, vview, pq, kpos_views[i],
+                        cfg.window)
+            att = att.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+            y = xi + mfmac.mf_linear(
+                att, lp["wo"]["w"], lp["wo"]["gamma"], policy=policy
+            )
+            h2 = common.apply_norm(cfg.norm, y, lp["ln2"])
+            if cfg.moe is not None:
+                y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
+            else:
+                y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1), (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        carry_block, x, (params["layers"], cache["k"], cache["v"])
+    )
+    # per-position head: each (B, 1, D) slice keeps decode's (1, D)
+    # activation-scale group through the final norm and LM head
+    logits = []
+    for i in range(c):
+        xe = common.apply_norm(cfg.norm, x[:, i:i + 1, :],
+                               params["final_norm"])
+        logits.append(_lm_head(cfg, policy, params, xe)[:, 0, :])
+    logits = jnp.stack(logits, axis=1)  # (B, C, V)
+    new_cache = {
+        "k": nk,
+        "v": nv,
+        "pos": kpos_phys,
+        "len": pos0 + n_new,
+    }
+    if paged:
+        new_cache["table"] = table
+    return logits, new_cache

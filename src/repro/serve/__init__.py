@@ -6,6 +6,8 @@ from repro.serve.engine import (  # noqa: F401
     make_chunk_step,
     make_decode_step,
     make_prefill_step,
+    make_verify_step,
+    prime_kernel_autotune,
 )
 from repro.serve.scheduler import FIFOScheduler, Request  # noqa: F401
 from repro.serve.slots import (  # noqa: F401
@@ -13,4 +15,5 @@ from repro.serve.slots import (  # noqa: F401
     PageAllocator,
     PageAllocatorError,
 )
+from repro.serve.spec import LowBitSelfDraft, NgramDrafter  # noqa: F401
 from repro.serve.trace import poisson_trace, shared_prefix_trace  # noqa: F401

@@ -45,11 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.policy import QuantPolicy
+from repro.core.policy import QuantPolicy, draft_policy
 from repro.models import registry
 from repro.parallel import actshard
 from repro.parallel.planner import ShardingPlan
 from repro.serve import slots as slots_lib
+from repro.serve import spec as spec_lib
 from repro.serve.scheduler import FIFOScheduler, Request
 
 
@@ -62,33 +63,75 @@ def _plan_batch(plan: ShardingPlan) -> int:
 
 
 def prime_kernel_autotune(cfg: ModelConfig, policy: QuantPolicy, *,
-                          batch: int, seq: int = 1, measure: bool = False):
-    """Report (or, with ``measure=True``, benchmark and persist) the tuned
-    block choices for this serving step's matmul shapes.
+                          batch: int, seq: int = 1,
+                          chunk: Optional[int] = None,
+                          draft_bits: Optional[int] = None,
+                          measure: bool = False):
+    """Warm (or, with ``measure=True``, benchmark and persist) the tuned
+    block choices for EVERY matmul shape this engine's serve steps can
+    dispatch.
 
-    With ``policy.use_pallas`` the serve-step matmuls already resolve
-    their block shapes through ``kernels/autotune.py`` at trace time
-    (tuned cache -> heuristic) instead of the old fixed 256^3 default;
-    call this before building steps to *see* those choices — log the
-    returned [(shape, BlockChoice), ...] — or to populate the cache on
-    new hardware with ``measure=True`` (the expensive sweep an operator
-    runs once per backend).  Tiling is numerics-free — the kernel's
-    fixed-order reduction is bit-identical across block shapes — so
-    retuning never changes served outputs.  Returns [] when the jnp path
-    is in use.
+    With ``policy.use_pallas`` the serve-step matmuls resolve their block
+    shapes through ``kernels/autotune.py`` at trace time (tuned cache ->
+    heuristic).  Historically this primed the forward *decode* shapes
+    only, so a chunked engine's first ``(B, C)`` ``chunk_step`` trace —
+    and a speculative engine's draft/verify traces — hit a cold cache.
+    Now:
 
-    Serving primes forward keys only (``include_grads=False``): a serve
-    step never executes the fused backward MACs; training runs prime
-    those via ``launch/train.py --autotune``.
+    * ``chunk=C`` also primes the ``M = batch * C`` chunk-step shapes
+      (the fused decode+prefill dispatch; the spec verify step's inner
+      per-position matmuls are decode-shaped and need nothing extra);
+    * ``draft_bits=b`` also primes the low-bit self-draft decode shapes
+      under ``core.policy.draft_policy`` bit-widths (on the raw
+      value-matmul path these normalize onto the same cache keys as the
+      serving bits — ``cache_key`` drops emax for ``quantize=False`` —
+      so this is a cheap no-op hit that *asserts* coverage rather than a
+      new sweep);
+    * shapes still missing after the consult are seeded with their
+      heuristic choice as **transient** cache entries (never flushed to
+      disk), so a primed engine performs zero tuning-cache misses at
+      serve time.  Tiling is numerics-free — the kernel's fixed-order
+      reduction is bit-identical across block shapes — so neither
+      seeding nor later retuning ever changes served outputs.
+
+    Returns [(shape, BlockChoice), ...], or [] when the jnp path is in
+    use.  Serving primes forward keys only (``include_grads=False``): a
+    serve step never executes the fused backward MACs; training runs
+    prime those via ``launch/train.py --autotune``.
     """
     if not policy.use_pallas:
         return []
     from repro.kernels import autotune
 
-    return autotune.prime_for_model(
-        cfg, batch=batch, seq=seq, bits_a=policy.bits_a,
-        bits_w=policy.bits_w, measure=measure,
-    )
+    seqs = [seq]
+    if chunk is not None and chunk > 1 and chunk != seq:
+        seqs.append(chunk)
+    out = []
+    for s in seqs:
+        out += autotune.prime_for_model(
+            cfg, batch=batch, seq=s, bits_a=policy.bits_a,
+            bits_w=policy.bits_w, measure=measure,
+        )
+    if draft_bits is not None:
+        out += autotune.prime_for_model(
+            cfg, batch=batch, seq=seq, bits_a=draft_bits,
+            bits_w=draft_bits, measure=measure,
+        )
+    if not measure:
+        # seed the still-cold shapes so serve-time lookups all hit
+        cache = autotune.active_cache()
+        for (m, k, n), choice in out:
+            if choice.source != "heuristic":
+                continue
+            key = autotune.cache_key(m, k, n, quantize=False)
+            if cache.get(key) is None:
+                cache.put(
+                    key,
+                    {"bm": choice.bm, "bn": choice.bn, "bk": choice.bk,
+                     "source": "primed"},
+                    persist=False,
+                )
+    return out
 
 
 # One jitted step per (cfg, policy): generate, PoolEngine, lockstep waves
@@ -138,6 +181,56 @@ def _encxkv_fn(cfg: ModelConfig, policy: QuantPolicy):
         return registry.encode_cross_kv(cfg, policy, params, frames)
 
     return encxkv_step
+
+
+def _verify_fn(cfg: ModelConfig, policy: QuantPolicy):
+    def verify_step(params, tokens, n_new, cache):
+        logits, cache = registry.verify_step(
+            cfg, policy, params, tokens, n_new, cache
+        )
+        # the same argmax the decode/chunk steps apply, per position —
+        # position i's token is exactly what plain decode would emit
+        # after tokens[:, i]
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, C)
+        return next_tok, logits, cache
+
+    return verify_step
+
+
+def _draft_fn(cfg: ModelConfig, draft_pol: QuantPolicy, k: int):
+    """k greedy decode steps under the low-bit draft policy, on the live
+    pool cache.  Returns (draft tokens (B, k), cache with ``len`` rewound
+    to the pre-draft positions — the verify pass starts from there; the
+    draft's K/V + pos pollution is erased by the engine's snapshot
+    restore before verification)."""
+
+    def draft_steps(params, token, cache):
+        toks = []
+        for _ in range(k):
+            logits, cache = registry.decode_step(
+                cfg, draft_pol, params, token, cache
+            )
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(token)
+        cache = dict(cache)
+        cache["len"] = cache["len"] - k
+        return jnp.stack(toks, axis=1), cache
+
+    return draft_steps
+
+
+def _spec_snap_fn(c: int):
+    def snap_step(cache):
+        return slots_lib.spec_snapshot(cache, c)
+
+    return snap_step
+
+
+def _spec_restore_fn():
+    def restore_step(cache, snap, keep):
+        return slots_lib.spec_restore(cache, snap, keep)
+
+    return restore_step
 
 
 def _shared_step(kind: str, cfg, policy, body):
@@ -250,6 +343,34 @@ def make_chunk_step(cfg: ModelConfig, policy: QuantPolicy, *,
     )
 
 
+def make_verify_step(cfg: ModelConfig, policy: QuantPolicy, *,
+                     plan: Optional[ShardingPlan] = None):
+    """The speculative-decoding verifier (``registry.verify_step``): one
+    full-policy weight pass scoring each slot's verify row, bit-identical
+    to sequential decode steps.  Returns per-position argmax tokens
+    (B, C), logits (B, C, V) and the advanced cache; the verify width is
+    carried by the call shapes (jit re-traces per width), so the closure
+    is shared exactly like the chunk step's."""
+    verify_step = _verify_fn(cfg, policy)
+    if plan is None:
+        return _shared_step("verify", cfg, policy, verify_step)
+    b = _plan_batch(plan)
+    cache_sh = plan.cache_shardings()
+    chunk_sh = plan.named(plan.chunk_pspec(b))
+    tok_sh = plan.named(plan.token_pspec(b))
+    return jax.jit(
+        verify_step,
+        in_shardings=(
+            plan.param_shardings(),
+            chunk_sh,
+            tok_sh,
+            cache_sh,
+        ),
+        out_shardings=(chunk_sh, None, cache_sh),
+        donate_argnums=(3,),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Continuous-batching pool engine
 # ---------------------------------------------------------------------------
@@ -275,6 +396,11 @@ class ServeStats:
     occupancy_sum: float = 0.0  # sum over steps of occupied/max_slots
     weight_passes: int = 0
     ttft_passes: Dict = dataclasses.field(default_factory=dict)
+    # speculative decoding (serve/spec.py) — deterministic, CI-gated
+    accepted_tokens: int = 0  # draft tokens accepted by verify rounds
+    draft_weight_passes: int = 0  # low-bit self-draft passes, counted
+    # separately from weight_passes: a 2-3-bit PoT draft stream is the
+    # nearly-free pass the paper's cost model promises, not a full one
     # paged-pool counters (zero for unpaged families) — all deterministic
     # for a fixed trace, so benchmarks/compare.py gates on them directly
     prompt_tokens: int = 0  # total prompt tokens across admitted requests
@@ -301,6 +427,17 @@ class ServeStats:
         if not self.prompt_tokens:
             return 0.0
         return self.prefix_hit_tokens / self.prompt_tokens
+
+    @property
+    def accepted_tokens_per_weight_pass(self) -> float:
+        """Tokens served per full-policy weight pass — THE speculative-
+        decoding lever (decode is weight-bound).  Plain decode emits at
+        most one token per pass, so anything > 1.0 is speculation's win;
+        the low-bit draft passes are tracked in ``draft_weight_passes``
+        and priced separately."""
+        if not self.weight_passes:
+            return 0.0
+        return self.emitted_tokens / self.weight_passes
 
     @property
     def kv_hbm_bytes_per_token(self) -> float:
@@ -350,11 +487,31 @@ class PoolEngine:
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  prefix_cache: bool = False,
+                 spec=None,
                  plan: Optional[ShardingPlan] = None):
         if cfg.family not in registry.POOLED_FAMILIES:
             raise NotImplementedError(
                 f"PoolEngine: family {cfg.family!r} lacks per-slot decode"
             )
+        if spec is not None:
+            if cfg.family not in registry.SPEC_FAMILIES:
+                raise NotImplementedError(
+                    f"spec: family {cfg.family!r} has no verify step "
+                    f"(supported: {registry.SPEC_FAMILIES})"
+                )
+            if not isinstance(spec, (spec_lib.NgramDrafter,
+                                     spec_lib.LowBitSelfDraft)):
+                raise TypeError(
+                    "spec must be a serve.spec.NgramDrafter or "
+                    f"serve.spec.LowBitSelfDraft (got {type(spec).__name__})"
+                )
+            span = registry.pool_span(cfg, max_len)
+            if spec.max_draft + 1 > span:
+                raise ValueError(
+                    f"spec.max_draft={spec.max_draft}: a verify row of "
+                    f"{spec.max_draft + 1} positions exceeds the cache "
+                    f"span {span}"
+                )
         if prefill_chunk is not None:
             if cfg.family not in registry.CHUNKED_FAMILIES:
                 raise NotImplementedError(
@@ -438,12 +595,21 @@ class PoolEngine:
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.prefill_chunk = prefill_chunk
+        self.spec = spec
+        self.span = registry.pool_span(cfg, max_len)
         self.plan = plan
         self._decode = make_decode_step(cfg, policy, plan=plan)
         self._chunk_step = (
             make_chunk_step(cfg, policy, plan=plan)
             if prefill_chunk is not None else None
         )
+        self._spec_snap = self._spec_restore = self._draft = None
+        if spec is not None:
+            self._verify = make_verify_step(cfg, policy, plan=plan)
+            if plan is None:
+                self._build_spec_steps()
+            # else: deferred to run()'s plan context (the builders'
+            # build-time/call-time ambient-plan contract)
         self._encxkv = None  # built lazily inside run()'s plan context
         # batch-1 prefill-into-slot: plan-less jit (in-model activations
         # are pinned through the actshard context when a plan is active).
@@ -452,6 +618,29 @@ class PoolEngine:
         # first run(); the private closure is then reused across runs.
         self._prefill = make_prefill_step(cfg, policy) if plan is None else None
         self.last_stats: Optional[ServeStats] = None
+
+    def _build_spec_steps(self):
+        """Jitted spec-round helpers (snapshot / restore / low-bit draft).
+        Built in __init__ for plan-less engines; plan-carrying engines
+        defer to run()'s actshard context (the _shared_step build-time /
+        call-time plan contract)."""
+        spec = self.spec
+        c = spec.max_draft + 1
+        self._spec_snap = _shared_step(
+            f"spec_snap{c}", self.cfg, self.policy, _spec_snap_fn(c)
+        )
+        self._spec_restore = _shared_step(
+            "spec_restore", self.cfg, self.policy, _spec_restore_fn()
+        )
+        if spec.needs_draft_pass:
+            # same weights, 2-3 PoT bits, re-quantized at use; the
+            # engine's prequantize/per-sample mutations already landed in
+            # self.policy, and draft_policy clears weights_prequantized
+            dpol = draft_policy(self.policy, spec.bits)
+            self._draft = _shared_step(
+                f"spec_draft{spec.max_draft}", self.cfg, dpol,
+                _draft_fn(self.cfg, dpol, spec.max_draft),
+            )
 
     # -- request admission -------------------------------------------------
     def _validate(self, requests: Sequence[Request]) -> None:
@@ -611,6 +800,9 @@ class PoolEngine:
         remaining: Dict[int, int] = {}  # slot -> tokens still to emit
         pending: Dict[int, np.ndarray] = {}  # slot -> unconsumed prompt
         prompts: Dict[int, np.ndarray] = {}  # slot -> full prompt (paged)
+        histories: Dict[int, List[int]] = {}  # slot -> prompt+emitted (ngram)
+        spec_dropped: Dict[int, set] = {}  # slot -> table cols at drop_id
+        track_hist = isinstance(self.spec, spec_lib.NgramDrafter)
         arrival_pass: Dict = {}  # uid -> weight_passes when first admissible
         last_tok = np.zeros((self.max_slots,), np.int32)
         chunk = self.prefill_chunk
@@ -639,9 +831,13 @@ class PoolEngine:
                 alloc.release_slot(slot)
                 dead_rows.append(slot)
             prompts.pop(slot, None)
+            histories.pop(slot, None)
+            spec_dropped.pop(slot, None)
 
         def first_token(slot, req, tok):
             out[req.uid].append(tok)
+            if track_hist:
+                histories[slot].append(tok)
             last_tok[slot] = tok
             stats.emitted_tokens += 1
             stats.ttft_passes[req.uid] = (
@@ -657,6 +853,8 @@ class PoolEngine:
         with ctx:
             if self._prefill is None:  # plan mode: build inside the context
                 self._prefill = make_prefill_step(self.cfg, self.policy)
+            if self.spec is not None and self._spec_snap is None:
+                self._build_spec_steps()  # plan mode: build inside the ctx
             cache = registry.init_pool_cache(
                 self.cfg, self.max_slots, self.max_len, self.cache_dtype,
                 **({"page_size": self.page_size, "num_pages": self.num_pages}
@@ -682,6 +880,10 @@ class PoolEngine:
                     stats.prompt_tokens += int(
                         jnp.asarray(req.tokens).shape[-1]
                     )
+                    if track_hist:
+                        histories[slot] = np.asarray(
+                            req.tokens, np.int64
+                        ).reshape(-1).tolist()
                     aplan = None
                     if alloc is not None:
                         aplan, hold = holds.pop(0)
@@ -723,6 +925,150 @@ class PoolEngine:
                         break
                     step = max(step + 1, nxt)
                     continue
+                if spec_dropped:
+                    # re-bind table entries lazily dropped by spec rollback
+                    # (wholly-rejected pages) before anything writes through
+                    # them again; numerically a no-op — their restored pos
+                    # is the -1 sentinel, masked either way
+                    cache = dict(cache)
+                    tbl = cache["table"]
+                    for slot, cols in spec_dropped.items():
+                        row = alloc.tables[slot]
+                        for lp in sorted(cols):
+                            if lp < len(row):
+                                tbl = tbl.at[slot, lp].set(int(row[lp]))
+                    cache["table"] = tbl
+                    spec_dropped.clear()
+                if self.spec is not None and active and not prefilling:
+                    # Speculative round: draft -> one verify pass -> accept.
+                    # Greedy argmax acceptance emits exactly the tokens
+                    # sequential pooled decode would (verify_step is
+                    # bit-identical to decode_step per position), so
+                    # speculation only changes the weight-pass count.
+                    spec = self.spec
+                    c = spec.max_draft + 1
+                    lens = np.asarray(cache["len"])
+                    snap = self._spec_snap(cache)
+                    drafts: Dict[int, np.ndarray] = {}
+                    if spec.needs_draft_pass:
+                        dtoks, cache = self._draft(
+                            self.params, jnp.asarray(last_tok), cache
+                        )
+                        stats.draft_weight_passes += spec.max_draft
+                        # erase the draft's K/V + pos pollution: the verify
+                        # pass must see the pristine pre-round cache (ring
+                        # wraps near the span end and windowed evictions
+                        # would otherwise hide keys decode would attend to)
+                        cache = self._spec_restore(
+                            cache, snap,
+                            jnp.zeros((self.max_slots,), jnp.int32),
+                        )
+                        dhost = np.asarray(dtoks)
+                        for slot in active:
+                            drafts[slot] = dhost[slot]
+                    else:
+                        for slot in active:
+                            drafts[slot] = spec.propose(
+                                histories[slot], spec.max_draft
+                            )
+                    tokens = np.zeros((self.max_slots, c), np.int32)
+                    n_new = np.zeros((self.max_slots,), np.int32)
+                    for slot in active:
+                        cap = remaining[slot]
+                        if self.cfg.window is None:
+                            # a verify row's valid positions may not wrap
+                            # the span ring (windowed archs wrap by design)
+                            cap = min(cap, self.span - int(lens[slot]))
+                        nd = max(0, min(len(drafts[slot]), cap - 1, c - 1))
+                        tokens[slot, 0] = last_tok[slot]
+                        if nd:
+                            tokens[slot, 1:1 + nd] = drafts[slot][:nd]
+                        n_new[slot] = 1 + nd
+                    if int(n_new.max()) > 1:
+                        vtok, _, cache = self._verify(
+                            self.params, jnp.asarray(tokens),
+                            jnp.asarray(n_new), cache,
+                        )
+                        stats.decode_steps += 1
+                        stats.weight_passes += 1
+                        stats.occupancy_sum += len(active) / self.max_slots
+                        if alloc is not None:
+                            stats.pages_in_use_sum += alloc.pages_in_use()
+                        vhost = np.asarray(vtok)
+                        keep = np.zeros((self.max_slots,), np.int32)
+                        for slot in active:
+                            req = sched.active_request(slot)
+                            nd = int(n_new[slot]) - 1
+                            a = spec_lib.greedy_accept(
+                                tokens[slot, 1:1 + nd], vhost[slot, :nd]
+                            )
+                            # accepted drafts + the verifier's bonus token,
+                            # then exactly sequential decode's stop rules:
+                            # cut at the first EOS, cap at the budget
+                            emit = [int(t) for t in tokens[slot, 1:1 + a]]
+                            emit.append(int(vhost[slot, a]))
+                            for j, t in enumerate(emit):
+                                if t == req.eos_id:
+                                    emit = emit[:j + 1]
+                                    break
+                            emit = emit[:remaining[slot]]
+                            keep[slot] = len(emit)
+                            stats.accepted_tokens += len(emit) - 1
+                            out[req.uid].extend(emit)
+                            if track_hist:
+                                histories[slot].extend(emit)
+                            stats.emitted_tokens += len(emit)
+                            last_tok[slot] = emit[-1]
+                            remaining[slot] -= len(emit)
+                            if remaining[slot] <= 0 or emit[-1] == req.eos_id:
+                                retire(slot)
+                        # roll back the rejected tail: keep[slot] kept
+                        # positions cache exactly the consumed context (the
+                        # last emitted token is never cached, as in decode)
+                        cache = self._spec_restore(
+                            cache, snap, jnp.asarray(keep)
+                        )
+                        if alloc is not None and self.cfg.window is None:
+                            # wholly-rejected pages: table entries ->
+                            # drop_id (pos already back at the -1 sentinel);
+                            # re-bound from alloc.tables before next write
+                            drop = slots_lib.drop_id(self.num_pages)
+                            didx = []
+                            for slot in active:
+                                if slot in dead_rows:
+                                    continue
+                                p0 = int(lens[slot])
+                                lo = -(-(p0 + int(keep[slot]))
+                                       // self.page_size)
+                                hi = (p0 + int(n_new[slot]) - 1) \
+                                    // self.page_size
+                                nmap = len(alloc.tables[slot])
+                                cols = [lp for lp in range(lo, hi + 1)
+                                        if lp < nmap]
+                                if cols:
+                                    spec_dropped.setdefault(
+                                        slot, set()
+                                    ).update(cols)
+                                    didx += [(slot, lp) for lp in cols]
+                            if didx:
+                                cache = dict(cache)
+                                rr = jnp.asarray([s for s, _ in didx],
+                                                 jnp.int32)
+                                cc = jnp.asarray([l for _, l in didx],
+                                                 jnp.int32)
+                                cache["table"] = (
+                                    cache["table"].at[rr, cc].set(drop)
+                                )
+                        if dead_rows:
+                            cache = self._void_table_rows(cache, dead_rows)
+                        sched.check_conservation()
+                        if alloc is not None:
+                            alloc.check_conservation()
+                        step += 1
+                        continue
+                    # no slot had a draft: the cache is pristine (any
+                    # self-draft pollution was restored above), so fall
+                    # through to the plain fixed-shape dispatch
                 finishing = []
                 if chunk is None or (not prefilling and self.cfg.window is None):
                     # decode fast-path: with nobody PREFILLING the fused
@@ -775,6 +1121,8 @@ class PoolEngine:
                     req = sched.active_request(slot)
                     tok = int(ntok_host[slot])
                     out[req.uid].append(tok)
+                    if track_hist:
+                        histories[slot].append(tok)
                     last_tok[slot] = tok
                     stats.emitted_tokens += 1
                     remaining[slot] -= 1

@@ -20,6 +20,12 @@ assigned, but still consuming prompt chunks rather than emitting tokens:
 * Conservation: queued + active + done == submitted, at every step
   (PREFILLING counts as active — the slot is occupied).
 
+Speculative decoding (serve/spec.py) needs no new states: a slot stays
+ACTIVE/DECODING through every draft->verify round — the engine may
+retire it mid-round (budget exhausted or EOS inside the accepted run),
+but from the scheduler's view that is an ordinary retire; acceptance,
+rollback, and page bookkeeping all live in the engine and allocator.
+
 The scheduler owns no arrays and never touches the model: the engine
 (serve/engine.py) asks it *which* request goes into *which* slot and
 reports retirements; everything jax-shaped lives in serve/slots.py.

@@ -528,3 +528,98 @@ class PageAllocator:
                 )
         if np.any(self.refcount < 0):
             raise PageAllocatorError("negative refcount")
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decoding snapshot / rollback (serve/spec.py)
+# ---------------------------------------------------------------------------
+#
+# A spec round (draft + verify) may write the C cache entries at global
+# positions [len, len + C) of every slot: the low-bit self-draft runs
+# C - 1 real decode_steps on the shared cache, and the verify step writes
+# each slot's n_new valid positions.  Rollback is snapshot/restore:
+# ``spec_snapshot`` gathers the (k, v, pos) state of exactly those C
+# entries (plus ``len``) *before* the round, and ``spec_restore`` scatters
+# the snapshot back at positions >= keep[b] — used twice per round, with
+# keep = 0 to erase the draft's pollution before the verify pass (so the
+# verifier sees the pristine pre-round cache and stays bit-identical to
+# sequential decode even on windowed rings, where a draft write evicts a
+# key later positions still need), and with keep = accepted + 1 after
+# acceptance to roll back the rejected tail.  On a non-windowed cache the
+# restored entries always held pos = -1 (the slot was never written —
+# no wrap can occur), so the restore is exactly the "pos clamped to -1"
+# rollback rule; on windowed rings it additionally restores the evicted
+# old keys.  Addressing mirrors the step bodies: slot (len + i) % span,
+# routed through the page table when paged; entries of dead slots
+# (drop_id tables) gather from the null page and scatter-drop.
+
+
+def _spec_addr(cache, c: int, pos0):
+    """Physical addresses of the C spec-round entries per slot.  Returns
+    ``(dest, loff)`` (B, C) page addressing for paged pools or
+    ``(None, sidx)`` for slot-rowed pools."""
+    offs = jax.lax.iota(jnp.int32, c)
+    gpos = pos0[:, None] + offs[None, :]  # (B, C)
+    if "table" in cache:
+        table = cache["table"]
+        page = cache["pos"].shape[1]
+        span = table.shape[1] * page
+        lo = gpos % span
+        dest = jnp.take_along_axis(table, lo // page, axis=1)  # (B, C)
+        return dest, lo % page
+    span = cache["k"].shape[2]
+    return None, gpos % span
+
+
+def spec_snapshot(cache, c: int):
+    """Gather the pre-round state of the C cache entries a spec round can
+    touch: ``{"k": (L, B, C, KV, hd), "v": ..., "pos": (B, C),
+    "len": (B,)}``.  jit-friendly (fixed-shape gathers); dead slots read
+    the null page (restored values are scatter-dropped anyway)."""
+    pos0 = cache["len"]
+    dest, off = _spec_addr(cache, c, pos0)
+    if dest is not None:  # paged: k (L, P+1, page, KV, hd)
+        return {
+            "k": cache["k"][:, dest, off],
+            "v": cache["v"][:, dest, off],
+            "pos": cache["pos"][dest, off],
+            "len": pos0,
+        }
+    rows = jnp.arange(off.shape[0])[:, None]
+    return {
+        "k": cache["k"][:, rows, off],
+        "v": cache["v"][:, rows, off],
+        "pos": cache["pos"][rows, off],
+        "len": pos0,
+    }
+
+
+def spec_restore(cache, snap, keep):
+    """Scatter the snapshot back at positions >= ``keep[b]`` and set
+    ``len = snap["len"] + keep``.  ``keep`` (B,) int32 in [0, C]: 0 erases
+    the whole round for that slot (draft-pollution cleanup / idle rows),
+    ``accepted + 1`` keeps the accepted prefix + bonus token.  Kept
+    positions are routed out of bounds so their scatters drop; dead slots'
+    addresses are drop_id-OOB already.  jit-friendly."""
+    c = snap["pos"].shape[1]
+    pos0 = snap["len"]
+    offs = jax.lax.iota(jnp.int32, c)
+    rej = offs[None, :] >= keep[:, None]  # (B, C) -> restore these
+    dest, off = _spec_addr(cache, c, pos0)
+    out = dict(cache)
+    if dest is not None:
+        oob = jnp.asarray(cache["pos"].shape[0], dest.dtype)  # P+1: drops
+        dest = jnp.where(rej, dest, oob)
+        out["k"] = cache["k"].at[:, dest, off].set(snap["k"], mode="drop")
+        out["v"] = cache["v"].at[:, dest, off].set(snap["v"], mode="drop")
+        out["pos"] = cache["pos"].at[dest, off].set(snap["pos"], mode="drop")
+    else:
+        span = cache["k"].shape[2]
+        rows = jnp.arange(off.shape[0])[:, None]
+        sidx = jnp.where(rej, off, span)  # OOB -> drop kept positions
+        out["k"] = cache["k"].at[:, rows, sidx].set(snap["k"], mode="drop")
+        out["v"] = cache["v"].at[:, rows, sidx].set(snap["v"], mode="drop")
+        out["pos"] = cache["pos"].at[rows, sidx].set(snap["pos"],
+                                                     mode="drop")
+    out["len"] = pos0 + keep
+    return out

@@ -1,0 +1,122 @@
+"""Speculative decoding for the serving pool: drafters + greedy acceptance.
+
+The pool's verifier is ``registry.verify_step``: one full-policy weight
+pass scores each slot's verify row — its last emitted token followed by
+up to C-1 draft candidates — **bit-identically** to sequential
+``decode_step`` calls (per-position ``(1, D)`` activation-scale groups
+and decode's exact op order; see the verify_step docstrings).  Greedy
+argmax acceptance then keeps the longest draft prefix that matches what
+plain decode would have emitted, plus the verifier's own next token as a
+bonus — so every served token is exactly the plain-pooled-decode token
+and speculation drops straight into the PR 4/5/6 conformance matrix.
+What speculation changes is only the *cost*: an accept of ``a`` drafts
+emits ``a + 1`` tokens for one weight pass
+(``ServeStats.accepted_tokens_per_weight_pass``).
+
+Two drafters, both proposing up to ``max_draft`` tokens per slot:
+
+* :class:`NgramDrafter` — host-side prompt-lookup (PLD): find the most
+  recent earlier occurrence of the history's length-n suffix and propose
+  its continuation.  Zero device passes, zero weight reads — pure win
+  whenever generation revisits prompt or earlier-output n-grams.
+* :class:`LowBitSelfDraft` — the paper-faithful drafter: the *same*
+  PoT weights re-quantized to 2-3 bits via ``core.policy.draft_policy``
+  run ``max_draft`` real decode steps on the live cache.  The ALS-PoTQ
+  policy already parameterizes bit-widths, so the draft pass streams the
+  same bytes through a narrower quantizer — nearly free in the
+  multiplication-free cost model, and counted separately
+  (``ServeStats.draft_weight_passes``) from the full-precision-policy
+  passes the acceptance ratio is measured against.
+
+Rollback is snapshot/restore (``slots.spec_snapshot`` /
+``slots.spec_restore``): the engine snapshots the C cache entries a
+round can touch, erases the self-draft's cache pollution before the
+verify pass (so the verifier sees the pristine pre-round state — this is
+what keeps windowed rings exact), and restores the rejected tail after
+acceptance.  On paged non-windowed slots the engine additionally resets
+table entries of wholly-rejected pages to ``drop_id`` (pos already
+restored to the -1 sentinel), re-binding them from the allocator's
+host-side table before the slot's next dispatch — no new allocator
+states.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NgramDrafter:
+    """Host-side n-gram / prompt-lookup drafter.
+
+    ``propose`` scans the request's token history (prompt + emitted) for
+    the most recent earlier occurrence of its length-n suffix, longest n
+    first (``max_n`` down to ``min_n``), and proposes the tokens that
+    followed it.  No weights, no device work — the draft cost is a few
+    microseconds of numpy per slot.
+    """
+
+    max_draft: int = 3
+    max_n: int = 3
+    min_n: int = 1
+
+    #: this drafter never streams weights (vs LowBitSelfDraft)
+    needs_draft_pass = False
+
+    def __post_init__(self):
+        if self.max_draft < 1:
+            raise ValueError(f"max_draft must be >= 1 (got {self.max_draft})")
+        if not 1 <= self.min_n <= self.max_n:
+            raise ValueError(
+                f"need 1 <= min_n <= max_n (got {self.min_n}, {self.max_n})"
+            )
+
+    def propose(self, history, k: int) -> np.ndarray:
+        """Up to ``min(k, max_draft)`` draft tokens continuing ``history``
+        (1-D int sequence), or an empty array when no n-gram matches."""
+        h = np.asarray(history, np.int64).reshape(-1)
+        k = min(int(k), self.max_draft)
+        if k <= 0 or len(h) < self.min_n + 1:
+            return np.zeros((0,), np.int32)
+        for n in range(min(self.max_n, len(h) - 1), self.min_n - 1, -1):
+            tail = h[-n:]
+            limit = len(h) - n  # start index of the suffix itself
+            for j in range(limit - 1, -1, -1):
+                if np.array_equal(h[j:j + n], tail):
+                    return h[j + n:j + n + k].astype(np.int32)
+        return np.zeros((0,), np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowBitSelfDraft:
+    """Low-bit self-draft config: ``max_draft`` greedy decode steps with
+    the serving weights under ``core.policy.draft_policy(policy, bits)``
+    (2-3 PoT bits, re-quantized at use).  The engine owns the device loop
+    — this is a marker carrying the knobs."""
+
+    max_draft: int = 3
+    bits: int = 3
+
+    needs_draft_pass = True
+
+    def __post_init__(self):
+        if self.max_draft < 1:
+            raise ValueError(f"max_draft must be >= 1 (got {self.max_draft})")
+
+
+def greedy_accept(drafts, verify_toks) -> int:
+    """Longest accepted draft prefix under greedy verification.
+
+    ``drafts[i]`` was proposed as position i's token; ``verify_toks[i]``
+    is the verifier's argmax at the position *before* it — i.e. exactly
+    the token plain decode would emit there.  Acceptance stops at the
+    first mismatch; the caller then emits the ``a`` accepted drafts plus
+    ``verify_toks[a]`` (the bonus token — correct whether a == 0 or the
+    whole draft matched)."""
+    a = 0
+    for d, g in zip(drafts, verify_toks):
+        if int(d) != int(g):
+            break
+        a += 1
+    return a

@@ -14,6 +14,17 @@ import numpy as np
 from repro.serve.scheduler import Request
 
 
+def _check_budget_range(new_lo: int, new_hi: int) -> None:
+    if new_lo > new_hi:
+        raise ValueError(
+            f"empty output-budget range: new_lo ({new_lo}) must be "
+            f"<= new_hi ({new_hi})"
+        )
+    if new_lo < 1:
+        raise ValueError(f"new_lo must be >= 1 (got {new_lo}): every "
+                         "request emits at least one token")
+
+
 def poisson_trace(cfg, *, n_requests: int, prompt_len: int, lam: float,
                   new_lo: int, new_hi: int, seed: int = 0) -> List[Request]:
     """Poisson(lam) inter-arrivals (in decode steps, first at 0) + uniform
@@ -21,6 +32,9 @@ def poisson_trace(cfg, *, n_requests: int, prompt_len: int, lam: float,
     lockstep waves rectangular (their layout requires it — one more thing
     the pool doesn't).  Encdec frames / VLM patch embeddings are
     synthesized per request."""
+    _check_budget_range(new_lo, new_hi)
+    if n_requests <= 0:
+        return []
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.poisson(lam, n_requests))
     arrivals[0] = 0
@@ -58,6 +72,9 @@ def shared_prefix_trace(cfg, *, n_requests: int, prefix_len: int,
     ``benchmarks/servebench.py`` uses to measure weight passes saved and
     TTFT won by prefix reuse (vs. the same trace served without sharing).
     Decoder-only families (token prompts are the prefix carrier)."""
+    _check_budget_range(new_lo, new_hi)
+    if n_requests <= 0:
+        return []
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.poisson(lam, n_requests))
     arrivals[0] = 0

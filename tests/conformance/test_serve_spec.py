@@ -1,0 +1,216 @@
+"""Spec-decode conformance: speculation never changes a request's tokens.
+
+The tentpole invariant of serve/spec.py: a PoolEngine with speculative
+decoding enabled (either drafter) serves every request **bit-identically**
+to the same engine without it — for any drafts, any acceptance pattern,
+any page geometry, windowed or not, on both kernel backends.  Greedy
+argmax acceptance makes this hold by construction: ``verify_step`` scores
+each candidate position with exactly ``decode_step``'s per-position ops
+(per-position (1, D) activation-scale groups, decode's op order — the DAG
+is decode's with the layer/position loops interchanged), so a draft is
+accepted only when it IS the token plain decode would emit, and the bonus
+token is plain decode's next token either way.  Rejected-tail cache
+entries are rolled back from a pre-round snapshot, so no speculative
+write survives into later steps.
+
+The matrix required by the PR: {llama3, mistral-nemo-12b@w8 (sliding
+-window ring)} x {jnp, pallas} x {page None (= span), small pages} x both
+drafters, plus encdec, chunked-prefill coexistence, EOS-mid-draft, and
+stats sanity (speculation must only ever LOWER the weight-pass count).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.policy import PAPER_FAITHFUL
+from repro.models import registry, spec as pspec
+from repro.serve import LowBitSelfDraft, NgramDrafter, PoolEngine, Request
+
+MAX_LEN = 24
+CHUNK = 4
+PALLAS = dataclasses.replace(PAPER_FAITHFUL, use_pallas=True)
+DRAFTERS = {
+    "ngram": NgramDrafter(max_draft=3),
+    "selfdraft": LowBitSelfDraft(max_draft=3, bits=3),
+}
+
+
+def _params_for(arch):
+    base, _, win = arch.partition("@w")
+    cfg = C.smoke_config(base)
+    if win:
+        cfg = dataclasses.replace(cfg, window=int(win))
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, *, seed=0, budget=(4, 9)):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 9))
+        toks = rng.integers(0, cfg.vocab, (1, plen)).astype(np.int32)
+        extras = {}
+        if cfg.family == "encdec":
+            extras["frames"] = np.asarray(
+                jax.random.normal(
+                    jax.random.PRNGKey(1000 + i),
+                    (1, cfg.enc_seq, cfg.frame_dim),
+                ),
+                np.float32,
+            )
+        reqs.append(
+            Request(
+                uid=i, tokens=toks, arrival=2 * i,
+                max_new_tokens=int(rng.integers(*budget)), extras=extras,
+            )
+        )
+    return reqs
+
+
+# memoized spec-off reference runs per (arch, pallas, page, chunk)
+_REF = {}
+
+
+def _reference(arch, policy, page, chunk, reqs, cfg, params):
+    key = (arch, policy.use_pallas, page, chunk)
+    if key not in _REF:
+        kw = dict(max_slots=2, max_len=MAX_LEN)
+        if page is not None:
+            kw["page_size"] = page
+        if chunk is not None:
+            kw["prefill_chunk"] = chunk
+        eng = PoolEngine(cfg, policy, params, **kw)
+        _REF[key] = (eng.run(reqs), eng.last_stats)
+    return _REF[key]
+
+
+def _check(arch, drafter, *, page=None, chunk=None, use_pallas=False, n=4):
+    cfg, params = _params_for(arch)
+    policy = PALLAS if use_pallas else PAPER_FAITHFUL
+    reqs = _requests(cfg, n, seed=len(arch))
+    ref, ref_stats = _reference(arch, policy, page, chunk, reqs, cfg, params)
+    kw = dict(max_slots=2, max_len=MAX_LEN, spec=DRAFTERS[drafter])
+    if page is not None:
+        kw["page_size"] = page
+    if chunk is not None:
+        kw["prefill_chunk"] = chunk
+    eng = PoolEngine(cfg, policy, params, **kw)
+    out = eng.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.uid], ref[r.uid],
+            err_msg=f"{arch} drafter={drafter} page={page} chunk={chunk} "
+                    f"pallas={use_pallas} uid={r.uid}",
+        )
+    st = eng.last_stats
+    # speculation may only ever SAVE full-policy weight passes; every
+    # accepted draft is one decode dispatch that never ran
+    assert st.weight_passes <= ref_stats.weight_passes
+    assert st.weight_passes + st.accepted_tokens >= ref_stats.weight_passes
+    assert st.emitted_tokens == ref_stats.emitted_tokens
+    if drafter == "ngram":
+        assert st.draft_weight_passes == 0
+    return st
+
+
+#: page sizes per arch: the windowed variant's span is its window (8)
+_PAGES = {"llama3-8b": 6, "mistral-nemo-12b@w8": 4, "whisper-large-v3": 4}
+
+
+@pytest.mark.parametrize("drafter", sorted(DRAFTERS))
+@pytest.mark.parametrize("page_kind", ["span", "small"])
+@pytest.mark.parametrize("arch", ["llama3-8b", "mistral-nemo-12b@w8"])
+def test_spec_bit_identical_jnp(arch, page_kind, drafter):
+    page = None if page_kind == "span" else _PAGES[arch]
+    _check(arch, drafter, page=page)
+
+
+@pytest.mark.parametrize("drafter", sorted(DRAFTERS))
+@pytest.mark.parametrize("page_kind", ["span", "small"])
+@pytest.mark.parametrize("arch", ["llama3-8b", "mistral-nemo-12b@w8"])
+def test_spec_bit_identical_pallas(arch, page_kind, drafter):
+    """Same invariant through the fused Pallas kernels (interpret mode on
+    CPU): the verify row rides the same tiling-invariant reductions as
+    decode, so acceptance stays exact on the kernel path."""
+    page = None if page_kind == "span" else _PAGES[arch]
+    _check(arch, drafter, page=page, use_pallas=True, n=3)
+
+
+@pytest.mark.parametrize("drafter", sorted(DRAFTERS))
+def test_spec_with_chunked_prefill(drafter):
+    """Speculative rounds and chunked piggybacked prefill coexist: spec
+    rounds run only when nobody is PREFILLING, prompts stream through the
+    unchanged chunk path, and tokens still match the spec-off engine."""
+    _check("llama3-8b", drafter, page=6, chunk=CHUNK)
+
+
+@pytest.mark.parametrize("drafter", sorted(DRAFTERS))
+def test_spec_encdec(drafter):
+    """encdec verify rows carry per-position cross-attention over the
+    slot's encoder K/V; whisper admits via chunked prefill (its frames
+    ride the encoder-side admission pass)."""
+    _check("whisper-large-v3", drafter, page=4, chunk=CHUNK, n=3)
+
+
+def test_spec_self_draft_saves_weight_passes():
+    """The low-bit self-drafter must actually accept drafts on a greedy
+    model (it argmaxes the same weights at 3 bits): strictly fewer
+    full-policy weight passes than spec-off, ratio above 1."""
+    cfg, params = _params_for("llama3-8b")
+    reqs = _requests(cfg, 4, seed=9, budget=(6, 10))
+    base = PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2,
+                      max_len=MAX_LEN)
+    ref = base.run(reqs)
+    eng = PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2,
+                     max_len=MAX_LEN, spec=LowBitSelfDraft(max_draft=3))
+    out = eng.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.uid], ref[r.uid])
+    st = eng.last_stats
+    assert st.accepted_tokens > 0
+    assert st.weight_passes < base.last_stats.weight_passes
+    assert st.accepted_tokens_per_weight_pass > 1.0
+    assert st.draft_weight_passes > 0
+
+
+def test_spec_eos_mid_draft_truncates():
+    """An EOS inside the accepted run must stop the request exactly where
+    sequential decode would: emitted tokens are a prefix of the spec-off
+    output ending at the first EOS."""
+    cfg, params = _params_for("llama3-8b")
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab, (1, 5)).astype(np.int32)
+    probe = Request(uid="p", tokens=toks, max_new_tokens=8)
+    base = PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2,
+                      max_len=MAX_LEN)
+    ref = base.run([probe])["p"]
+    eos = int(ref[3])  # retire mid-sequence, inside a potential draft run
+    req = dataclasses.replace(probe, eos_id=eos)
+    ref_eos = base.run([req])["p"]
+    eng = PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2,
+                     max_len=MAX_LEN, spec=LowBitSelfDraft(max_draft=3))
+    out = eng.run([req])["p"]
+    np.testing.assert_array_equal(out, ref_eos)
+    assert out[-1] == eos and eos not in out[:-1]
+
+
+def test_spec_rejects_bad_config():
+    cfg, params = _params_for("llama3-8b")
+    with pytest.raises(TypeError, match="NgramDrafter"):
+        PoolEngine(cfg, PAPER_FAITHFUL, params, max_slots=2,
+                   max_len=MAX_LEN, spec=object())
+    win = dataclasses.replace(cfg, window=4)
+    with pytest.raises(ValueError, match="exceeds the cache span"):
+        PoolEngine(win, PAPER_FAITHFUL, params, max_slots=2,
+                   max_len=MAX_LEN, spec=NgramDrafter(max_draft=5))
+    ssm_cfg = C.smoke_config("mamba2-2.7b")
+    ssm_params = pspec.materialize(
+        registry.param_specs(ssm_cfg), jax.random.PRNGKey(0)
+    )
+    with pytest.raises(NotImplementedError, match="verify"):
+        PoolEngine(ssm_cfg, PAPER_FAITHFUL, ssm_params, max_slots=2,
+                   max_len=MAX_LEN, spec=NgramDrafter())

@@ -345,3 +345,67 @@ def test_tuned_blocks_bit_identical_through_ops(tmp_path):
         )
         out = np.asarray(ops.potq_matmul(a, w, interpret=True))
         np.testing.assert_array_equal(out, base)
+
+
+def test_serve_priming_leaves_zero_tuning_misses(tmp_path, monkeypatch):
+    """prime_kernel_autotune must cover EVERY shape a pallas serve engine
+    traces — pooled decode, chunked prefill, and the speculative
+    draft/verify steps — so a primed engine performs zero tuning-cache
+    misses (heuristic fallbacks) at serve time.  The draft pass runs
+    under ``draft_policy`` bit-widths, which land on the same raw-path
+    keys (``cache_key`` normalizes emax out for ``quantize=False``); the
+    verify step's inner matmuls are decode-shaped; the ``(B, C)``
+    chunk-step shapes are primed via ``chunk=``."""
+    import dataclasses
+
+    from repro import configs as C
+    from repro.core.policy import PAPER_FAITHFUL
+    from repro.models import registry as mreg, spec as pspec
+    from repro.serve import (
+        LowBitSelfDraft,
+        PoolEngine,
+        Request,
+        prime_kernel_autotune,
+    )
+
+    _use(tmp_path)  # pinned empty tuning cache
+    policy = dataclasses.replace(PAPER_FAITHFUL, use_pallas=True)
+    # a d_ff no other test uses: the serve steps are process-cached per
+    # (cfg, policy), so a fresh cfg guarantees the traces (and their
+    # trace-time autotune lookups) happen inside the spy window below
+    base_cfg = C.smoke_config("llama3-8b")
+    cfg = dataclasses.replace(base_cfg, d_ff=base_cfg.d_ff + 128)
+    params = pspec.materialize(mreg.param_specs(cfg), jax.random.PRNGKey(0))
+
+    misses = []
+    real = autotune.lookup
+
+    def spy(m, k, n, **kw):
+        choice = real(m, k, n, **kw)
+        if choice.source == "heuristic":
+            misses.append((m, k, n, kw.get("op", "potq_matmul")))
+        return choice
+
+    monkeypatch.setattr(autotune, "lookup", spy)
+
+    def serve(batch, **kw):
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(
+                uid=i,
+                tokens=rng.integers(0, cfg.vocab, (1, 4)).astype(np.int32),
+                max_new_tokens=3,
+            )
+            for i in range(batch)
+        ]
+        eng = PoolEngine(cfg, policy, params, max_slots=batch, max_len=12,
+                         **kw)
+        eng.run(reqs)
+
+    serve(3)  # control: a cold cache MUST surface heuristic fallbacks
+    assert misses, "spy saw no trace-time lookups — control trace missing"
+
+    prime_kernel_autotune(cfg, policy, batch=4, chunk=2, draft_bits=3)
+    misses.clear()  # priming's own consults report heuristics by design
+    serve(4, prefill_chunk=2, spec=LowBitSelfDraft(max_draft=2, bits=3))
+    assert not misses, f"serve-time tuning misses after priming: {misses}"

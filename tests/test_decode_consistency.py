@@ -54,18 +54,20 @@ def test_pooled_decode_heterogeneous_positions(arch, policy_kind):
     mistral-nemo adds the sliding-window ring cache (span 8 < prompt
     length), so per-slot ring wrap is covered too.
 
-    Under the serving policy (quantized + per-sample scales — what the
-    pool engine actually runs) the comparison is BITWISE at the logits
-    level.  Under the FP32 baseline it uses the file's 2e-4 tolerance:
-    whisper's raw-f32 decode has a pre-existing ~1e-7 batch-size
-    compilation wobble (XLA fuses the scan body differently for B=1 vs
-    B=3) that quantization's bf16-snapped operands do not exhibit."""
+    The comparison is BITWISE at the logits level under BOTH policies.
+    The serving policy (quantized + per-sample scales — what the pool
+    engine actually runs) always was; the FP32 baseline used to hide a
+    ~1e-7 whisper batch-size wobble behind a 2e-4 tolerance (XLA fused
+    the non-enabled ``jnp.dot``/``dot_general`` reductions differently
+    for B=1 vs B=3) until mfmac pinned those paths to
+    ``Precision.HIGHEST`` — fixed-order reductions are batch-shape
+    independent, so raw FP32 now matches exactly too."""
     import dataclasses as _dc
 
     from repro.core.policy import PAPER_FAITHFUL
 
     if policy_kind == "fp32":
-        pol, exact = POL, False
+        pol, exact = POL, True
     else:
         pol = _dc.replace(PAPER_FAITHFUL, per_sample_act_scales=True)
         exact = True

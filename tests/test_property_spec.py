@@ -1,0 +1,328 @@
+"""Spec-decode acceptance properties: random drafts never corrupt serving.
+
+Three layers, mirroring tests/test_property_paging.py's hypothesis-optional
+idiom (fixed deterministic sweeps always run; hypothesis widens them when
+installed, with the nightly ``REPRO_HYPOTHESIS_SCALE`` multiplier):
+
+* host math — ``greedy_accept`` returns the longest matching prefix and
+  nothing else; ``NgramDrafter.propose`` only ever proposes a contiguous
+  continuation that actually occurs in the history;
+* rollback machinery — ``slots.spec_snapshot`` / ``spec_restore`` on
+  randomized paged and slot-rowed caches, checked against an independent
+  numpy model: rejected positions are restored bit-exactly, kept
+  positions retain the round's writes, untouched storage never moves,
+  and ``len`` lands at ``len0 + keep``;
+* the whole engine — a *chaos* drafter proposing random-length,
+  mostly-garbage drafts drives a real paged ``PoolEngine``; served tokens
+  must stay bit-identical to the spec-off engine (acceptance only ever
+  keeps true greedy-decode prefixes), while the engine's own per-step
+  ``check_conservation`` calls (scheduler counts + page refcounts) and
+  the allocator's final-drain check ride along — a rollback bug that
+  leaks or double-frees a page fails the run, not just the comparison.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.policy import PAPER_FAITHFUL
+from repro.models import registry, spec as pspec
+from repro.serve import NgramDrafter, PoolEngine, Request
+from repro.serve.slots import spec_restore, spec_snapshot
+from repro.serve.spec import greedy_accept
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # degrade to the deterministic sweep only
+    hypothesis = None
+
+_SCALE = max(1, int(__import__("os").environ.get("REPRO_HYPOTHESIS_SCALE", "1")))
+
+
+# ---------------------------------------------------------------------------
+# host math: greedy acceptance + n-gram proposals
+# ---------------------------------------------------------------------------
+
+
+def _check_accept(drafts, verify):
+    a = greedy_accept(drafts, verify)
+    m = min(len(drafts), len(verify))
+    assert 0 <= a <= m
+    assert list(drafts[:a]) == list(verify[:a])  # accepted prefix matches
+    if a < m:
+        assert drafts[a] != verify[a]  # stopped at a real mismatch
+
+
+def _check_propose(history, k, max_n):
+    d = NgramDrafter(max_draft=3, max_n=max_n)
+    r = d.propose(history, k)
+    assert r.dtype == np.int32
+    assert len(r) <= min(max(k, 0), d.max_draft)
+    if len(r):
+        h = np.asarray(history, np.int64).reshape(-1)
+        # the proposal is a contiguous run of the history (PLD promise)
+        assert any(
+            np.array_equal(h[i:i + len(r)], r)
+            for i in range(len(h) - len(r) + 1)
+        )
+
+
+ACCEPT_CASES = [
+    ([], []),
+    ([5], [5]),
+    ([5], [6]),
+    ([1, 2, 3], [1, 2, 3]),
+    ([1, 2, 3], [1, 9, 3]),
+    ([1, 2], [1, 2, 3]),
+    ([1, 2, 3], [1]),
+]
+PROPOSE_CASES = [
+    ([], 3, 3),
+    ([7], 3, 3),
+    ([1, 2, 1, 2, 1], 3, 2),
+    ([4, 4, 4, 4], 2, 3),
+    ([1, 2, 3, 4, 1, 2], 3, 3),
+    (list(range(10)) * 2, 3, 3),
+]
+
+
+@pytest.mark.parametrize("drafts,verify", ACCEPT_CASES)
+def test_greedy_accept_fixed(drafts, verify):
+    _check_accept(drafts, verify)
+
+
+@pytest.mark.parametrize("history,k,max_n", PROPOSE_CASES)
+def test_ngram_propose_fixed(history, k, max_n):
+    _check_propose(history, k, max_n)
+
+
+if hypothesis is not None:
+
+    @hypothesis.given(
+        drafts=st.lists(st.integers(0, 5), max_size=6),
+        verify=st.lists(st.integers(0, 5), max_size=6),
+    )
+    @hypothesis.settings(deadline=None, max_examples=200 * _SCALE)
+    def test_greedy_accept_property(drafts, verify):
+        _check_accept(drafts, verify)
+
+    @hypothesis.given(
+        history=st.lists(st.integers(0, 3), max_size=24),
+        k=st.integers(-1, 5),
+        max_n=st.integers(1, 4),
+    )
+    @hypothesis.settings(deadline=None, max_examples=200 * _SCALE)
+    def test_ngram_propose_property(history, k, max_n):
+        _check_propose(history, k, max_n)
+
+
+# ---------------------------------------------------------------------------
+# rollback machinery: snapshot/restore vs an independent numpy model
+# ---------------------------------------------------------------------------
+
+_L, _KV, _HD = 2, 1, 2
+
+
+def _roundtrip(paged, geometry, seed):
+    """Snapshot a random cache, scribble junk on the C touched entries
+    (addresses recomputed in pure numpy), restore with random ``keep``,
+    and compare every element of storage against the model."""
+    rng = np.random.default_rng(seed)
+    if paged:
+        page, npp, nb = geometry  # page size, pages/slot, slots
+        span = page * npp
+        rows = nb * npp + 1  # distinct physical pages + the null page
+        null = rows - 1
+        table = rng.permutation(rows - 1)[: nb * npp]
+        table = table.reshape(nb, npp).astype(np.int32)
+        if rng.integers(0, 2):  # a rolled-back / dead page -> null row
+            table[rng.integers(0, nb), rng.integers(0, npp)] = null
+        k0 = rng.normal(size=(_L, rows, page, _KV, _HD)).astype(np.float32)
+        pos0 = rng.integers(-1, 40, (rows, page)).astype(np.int32)
+    else:
+        span, nb = geometry
+        k0 = rng.normal(size=(_L, nb, span, _KV, _HD)).astype(np.float32)
+        pos0 = rng.integers(-1, 40, (nb, span)).astype(np.int32)
+    v0 = rng.normal(size=k0.shape).astype(np.float32)
+    c = int(rng.integers(1, min(span, 4) + 1))
+    lens = rng.integers(0, 2 * span, (nb,)).astype(np.int32)
+    keep = rng.integers(0, c + 1, (nb,)).astype(np.int32)
+
+    cache = {
+        "k": jnp.asarray(k0), "v": jnp.asarray(v0),
+        "pos": jnp.asarray(pos0), "len": jnp.asarray(lens),
+    }
+    if paged:
+        cache["table"] = jnp.asarray(table)
+    snap = jax.jit(spec_snapshot, static_argnums=1)(cache, c)
+
+    # the round scribbles junk on every touched entry (numpy addressing)
+    kj, vj, pj = k0.copy(), v0.copy(), pos0.copy()
+
+    def _addr(b, j):
+        g = (int(lens[b]) + j) % span
+        if paged:
+            return int(table[b, g // page]), g % page
+        return b, g
+
+    for b in range(nb):
+        for j in range(c):
+            r, o = _addr(b, j)
+            kj[:, r, o] = rng.normal(size=(_L, _KV, _HD))
+            vj[:, r, o] = rng.normal(size=(_L, _KV, _HD))
+            pj[r, o] = int(rng.integers(100, 200))
+    dirty = dict(cache, k=jnp.asarray(kj), v=jnp.asarray(vj),
+                 pos=jnp.asarray(pj), len=jnp.asarray(lens + c))
+    out = jax.jit(spec_restore)(dirty, snap, jnp.asarray(keep))
+
+    # model: start from the junked state, restore the rejected tail
+    ek, ev, ep = kj.copy(), vj.copy(), pj.copy()
+    for b in range(nb):
+        for j in range(int(keep[b]), c):
+            r, o = _addr(b, j)
+            ek[:, r, o] = k0[:, r, o]
+            ev[:, r, o] = v0[:, r, o]
+            ep[r, o] = pos0[r, o]
+    if paged:  # the null row absorbs dead-slot traffic: exclude it
+        live = np.arange(rows) != null
+        sl_k = (slice(None), live)
+        sl_p = (live,)
+    else:
+        sl_k = sl_p = (slice(None),)
+    np.testing.assert_array_equal(np.asarray(out["k"])[sl_k], ek[sl_k])
+    np.testing.assert_array_equal(np.asarray(out["v"])[sl_k], ev[sl_k])
+    np.testing.assert_array_equal(np.asarray(out["pos"])[sl_p], ep[sl_p])
+    np.testing.assert_array_equal(np.asarray(out["len"]), lens + keep)
+    if paged:
+        np.testing.assert_array_equal(np.asarray(out["table"]), table)
+
+
+PAGED_GEOMETRIES = [(2, 2, 2), (1, 3, 1), (3, 2, 3), (4, 1, 2)]
+ROWED_GEOMETRIES = [(4, 2), (1, 1), (6, 3), (8, 2)]
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("geometry", PAGED_GEOMETRIES)
+def test_rollback_roundtrip_paged_fixed(geometry, seed):
+    _roundtrip(True, geometry, seed)
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("geometry", ROWED_GEOMETRIES)
+def test_rollback_roundtrip_rowed_fixed(geometry, seed):
+    _roundtrip(False, geometry, seed)
+
+
+if hypothesis is not None:
+
+    @hypothesis.given(
+        geometry=st.tuples(st.integers(1, 4), st.integers(1, 3),
+                           st.integers(1, 3)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=40 * _SCALE)
+    def test_rollback_roundtrip_paged(geometry, seed):
+        _roundtrip(True, geometry, seed)
+
+    @hypothesis.given(
+        geometry=st.tuples(st.integers(1, 8), st.integers(1, 3)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=40 * _SCALE)
+    def test_rollback_roundtrip_rowed(geometry, seed):
+        _roundtrip(False, geometry, seed)
+
+
+# ---------------------------------------------------------------------------
+# whole engine under a chaos drafter
+# ---------------------------------------------------------------------------
+
+
+class _ChaosDrafter(NgramDrafter):
+    """Adversarial host drafter: random-length drafts of mostly-garbage
+    tokens, occasionally echoing recent history (so some rounds accept).
+    Subclasses NgramDrafter so the engine treats it as a host-side
+    (no draft weight pass) drafter; the frozen-dataclass ceremony is why
+    the rng rides in via ``object.__setattr__``."""
+
+    def __init__(self, seed, vocab, max_draft=3):
+        super().__init__(max_draft=max_draft)
+        object.__setattr__(self, "_rng", np.random.default_rng(seed))
+        object.__setattr__(self, "_vocab", int(vocab))
+
+    def propose(self, history, k):
+        rng = self._rng
+        k = min(int(k), self.max_draft)
+        n = int(rng.integers(0, k + 1)) if k > 0 else 0
+        if n == 0:
+            return np.zeros((0,), np.int32)
+        if rng.integers(0, 2):
+            h = np.asarray(history, np.int64).reshape(-1)
+            return h[-n:].astype(np.int32)
+        return rng.integers(0, self._vocab, (n,)).astype(np.int32)
+
+
+_MAX_LEN = 20
+_CTX = {}
+
+
+def _ctx():
+    if not _CTX:
+        cfg = C.smoke_config("llama3-8b")
+        _CTX["cfg"] = cfg
+        _CTX["params"] = pspec.materialize(
+            registry.param_specs(cfg), jax.random.PRNGKey(0)
+        )
+    return _CTX["cfg"], _CTX["params"]
+
+
+def _drive_engine(seed, page):
+    cfg, params = _ctx()
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(3):
+        plen = int(rng.integers(3, 8))
+        reqs.append(Request(
+            uid=i,
+            tokens=rng.integers(0, cfg.vocab, (1, plen)).astype(np.int32),
+            arrival=int(rng.integers(0, 4)),
+            max_new_tokens=int(rng.integers(2, 8)),
+        ))
+    kw = dict(max_slots=2, max_len=_MAX_LEN)
+    if page is not None:
+        kw["page_size"] = page
+    base = PoolEngine(cfg, PAPER_FAITHFUL, params, **kw)
+    ref = base.run(reqs)
+    eng = PoolEngine(cfg, PAPER_FAITHFUL, params,
+                     spec=_ChaosDrafter(seed, cfg.vocab), **kw)
+    out = eng.run(reqs)  # conservation + refcounts asserted every step
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.uid], ref[r.uid],
+            err_msg=f"seed={seed} page={page} uid={r.uid}",
+        )
+    st_, ref_ = eng.last_stats, base.last_stats
+    assert st_.emitted_tokens == ref_.emitted_tokens
+    assert st_.weight_passes <= ref_.weight_passes
+    assert st_.weight_passes + st_.accepted_tokens >= ref_.weight_passes
+    assert st_.draft_weight_passes == 0  # chaos drafter is host-side
+
+
+@pytest.mark.parametrize("seed,page", [(0, None), (1, 4), (2, 5)])
+def test_engine_chaos_drafts_fixed(seed, page):
+    _drive_engine(seed, page)
+
+
+if hypothesis is not None:
+
+    @hypothesis.given(
+        seed=st.integers(0, 2**31 - 1),
+        page=st.sampled_from([None, 4, 5, 10]),
+    )
+    @hypothesis.settings(deadline=None, max_examples=5 * _SCALE)
+    def test_engine_chaos_drafts(seed, page):
+        _drive_engine(seed, page)

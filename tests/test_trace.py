@@ -1,0 +1,64 @@
+"""Edge cases of the synthetic trace generators (serve/trace.py).
+
+Both generators used to raise ``IndexError`` on ``n_requests=0``
+(``arrivals[0] = 0`` on an empty cumsum) and passed a nonsense
+``new_lo > new_hi`` range straight into ``rng.integers`` — these pin the
+fixed behaviour: empty traces come back as ``[]``, bad budget ranges
+raise ``ValueError`` with the offending numbers in the message.
+"""
+import pytest
+
+from repro import configs as C
+from repro.serve import poisson_trace, shared_prefix_trace
+
+
+def _cfg():
+    return C.smoke_config("llama3-8b")
+
+
+def _poisson(cfg, **kw):
+    args = dict(n_requests=3, prompt_len=4, lam=1.0, new_lo=2, new_hi=5)
+    args.update(kw)
+    return poisson_trace(cfg, **args)
+
+
+def _prefix(cfg, **kw):
+    args = dict(n_requests=3, prefix_len=5, suffix_len=2, lam=1.0,
+                new_lo=2, new_hi=5)
+    args.update(kw)
+    return shared_prefix_trace(cfg, **args)
+
+
+@pytest.mark.parametrize("gen", [_poisson, _prefix], ids=["poisson", "prefix"])
+def test_zero_requests_yields_empty_trace(gen):
+    assert gen(_cfg(), n_requests=0) == []
+
+
+@pytest.mark.parametrize("gen", [_poisson, _prefix], ids=["poisson", "prefix"])
+def test_negative_requests_yields_empty_trace(gen):
+    assert gen(_cfg(), n_requests=-2) == []
+
+
+@pytest.mark.parametrize("gen", [_poisson, _prefix], ids=["poisson", "prefix"])
+def test_inverted_budget_range_raises(gen):
+    with pytest.raises(ValueError, match=r"new_lo \(6\) must be <= new_hi \(2\)"):
+        gen(_cfg(), new_lo=6, new_hi=2)
+
+
+@pytest.mark.parametrize("gen", [_poisson, _prefix], ids=["poisson", "prefix"])
+def test_zero_budget_raises(gen):
+    with pytest.raises(ValueError, match="new_lo must be >= 1"):
+        gen(_cfg(), new_lo=0, new_hi=2)
+
+
+@pytest.mark.parametrize("gen", [_poisson, _prefix], ids=["poisson", "prefix"])
+def test_range_checked_before_empty_shortcut(gen):
+    # a bad range is a caller bug even when the trace is empty
+    with pytest.raises(ValueError):
+        gen(_cfg(), n_requests=0, new_lo=6, new_hi=2)
+
+
+def test_single_point_budget_ok():
+    reqs = _poisson(_cfg(), new_lo=3, new_hi=3)
+    assert [r.max_new_tokens for r in reqs] == [3, 3, 3]
+    assert reqs[0].arrival == 0
