@@ -23,9 +23,10 @@ servebench (exactly reproducible for the fixed smoke trace):
     paged chunked engine on both traces)
   It also re-asserts the cross-engine invariants (pool < lockstep steps;
   chunked < solo-prefill passes and TTFT; small pages < page=span KV
-  bytes/token; prefix sharing < unshared passes and TTFT; speculation <
-  spec-off passes with >1 token per pass on both traces), so a
-  regression can't slip in by moving baseline and current together.
+  bytes/token; PoT-quantized pages <= half of raw paged bytes/token;
+  prefix sharing < unshared passes and TTFT; speculation < spec-off
+  passes with >1 token per pass on both traces), so a regression can't
+  slip in by moving baseline and current together.
 
 kernelbench (dimensionless, machine-normalized):
   - ``speedup_x`` of the ``potq_grad_fused_*`` rows (fused-vs-composed
@@ -64,6 +65,9 @@ SERVE_COUNTERS = [
     ("pool_paged.weight_passes", True),
     ("pool_paged.mean_ttft_passes", True),
     ("pool_paged.kv_hbm_bytes_per_token", True),
+    ("pool_kvq.weight_passes", True),
+    ("pool_kvq.mean_ttft_passes", True),
+    ("pool_kvq.kv_hbm_bytes_per_token", True),
     ("lockstep.decode_steps", True),
     ("prefix_on.weight_passes", True),
     ("prefix_on.mean_ttft_passes", True),
@@ -82,6 +86,7 @@ SERVE_WALLCLOCK = [
     "pool.tokens_per_s",
     "pool_chunked.tokens_per_s",
     "pool_paged.tokens_per_s",
+    "pool_kvq.tokens_per_s",
     "lockstep.tokens_per_s",
     "speedup_tokens_per_s",
 ]
@@ -96,7 +101,7 @@ def _get(d, path):
 def compare_servebench(base, cur, tol):
     failures, warnings = [], []
     setup = ("trace", "prefix_trace", "requests", "slots", "prefill_chunk",
-             "page_size", "spec")
+             "page_size", "spec", "kv_quant")
     if any(base.get(k) != cur.get(k) for k in setup):
         failures.append(
             "servebench setup mismatch: baseline and current ran different "
@@ -135,6 +140,12 @@ def compare_servebench(base, cur, tol):
         failures.append(
             "servebench: small pages no longer shrink the live KV HBM "
             "footprint per token vs the page=span geometry"
+        )
+    if (_get(cur, "pool_kvq.kv_hbm_bytes_per_token")
+            > _get(cur, "pool_paged.kv_hbm_bytes_per_token") / 2):
+        failures.append(
+            "servebench: PoT-quantized pages no longer halve the live KV "
+            "HBM footprint per token vs raw paged"
         )
     if (_get(cur, "prefix_on.weight_passes")
             >= _get(cur, "prefix_off.weight_passes")):

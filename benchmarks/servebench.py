@@ -15,6 +15,15 @@ through four engines:
   (``--page-size``): same tokens, same weight passes, but retired slots
   free page-granular memory immediately, so the mean live KV HBM
   footprint per emitted token drops vs the page=span geometry.
+* ``pool_kvq`` — the paged chunked engine with PoT-quantized KV pages
+  (``core.policy.KV_PINNED``: 4-bit nibble-packed codes + one int32
+  scale per written token, docs/DESIGN_serving.md §1e).  Gated two ways:
+  its output must be **bit-identical** to a one-slot quantized engine at
+  the default page=span geometry run one request at a time with the same
+  chunked-prefill recipe (the pinned recipe's pool/page/arrival
+  invariance, end to end on the real trace), and its live KV HBM bytes
+  per emitted token must be at most HALF of ``pool_paged``'s (the wire
+  format's reason to exist).
 * ``lockstep`` — serve.lockstep_generate in waves of ``--slots`` requests:
   a wave prefills together once its last member has arrived and decodes
   to the wave's **max** output length — dead slots keep streaming every
@@ -69,6 +78,7 @@ are noisy).
 CI runs ``--smoke`` and uploads the JSON next to kernelbench's artifact.
 """
 import argparse
+import dataclasses
 import json
 import time
 
@@ -78,7 +88,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.policy import PAPER_FAITHFUL
+from repro.core.policy import KV_PINNED, PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
 from repro.serve import (
     LowBitSelfDraft, PoolEngine, lockstep_generate, poisson_trace,
@@ -87,11 +97,11 @@ from repro.serve import (
 
 
 def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
-             page_size=None, prefix_cache=False, spec=None):
+             page_size=None, prefix_cache=False, spec=None, kv_quant=None):
     eng = PoolEngine(
         cfg, PAPER_FAITHFUL, params, max_slots=slots, max_len=max_len,
         prefill_chunk=prefill_chunk, page_size=page_size,
-        prefix_cache=prefix_cache, spec=spec,
+        prefix_cache=prefix_cache, spec=spec, kv_quant=kv_quant,
     )
     eng.run(reqs[:1])  # warmup: compile prefill + decode/chunk step
     t0 = time.perf_counter()
@@ -231,6 +241,25 @@ def main(argv=None):
         cfg, params, reqs, slots=args.slots, max_len=args.max_len,
         prefill_chunk=chunk, page_size=args.page_size,
     )
+    kvq, kvq_out = run_pool(
+        cfg, params, reqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size, kv_quant=KV_PINNED,
+    )
+    # the pinned-recipe reference: a ONE-slot quantized engine at the
+    # default page=span geometry, one request at a time — no batching, no
+    # paging.  Same chunked-prefill recipe as the pooled engine (chunked
+    # prompt logits attend the quantized pages; solo prefill's come from
+    # raw in-pass attention — a different recipe, not a different pool).
+    # Per-token scales make the pooled run above byte-equal to this by
+    # construction; the gate pins it.
+    solo_kvq = PoolEngine(
+        cfg, PAPER_FAITHFUL, params, max_slots=1, max_len=args.max_len,
+        prefill_chunk=chunk, kv_quant=KV_PINNED,
+    )
+    solo_kvq_out = {}
+    for r in reqs:
+        one = solo_kvq.run([dataclasses.replace(r, arrival=0)])
+        solo_kvq_out.update({k: list(map(int, v)) for k, v in one.items()})
     lock = run_lockstep(cfg, params, reqs, slots=args.slots,
                         max_len=args.max_len)
 
@@ -279,9 +308,11 @@ def main(argv=None):
             "prefix_len": args.prefix_len, "suffix_len": args.suffix_len,
             "arrival_lam": args.arrival_lam, "seed": args.seed,
         },
+        "kv_quant": {"bits": KV_PINNED.bits, "pack": KV_PINNED.pack},
         "pool": pool,
         "pool_chunked": chunked,
         "pool_paged": paged,
+        "pool_kvq": kvq,
         "lockstep": lock,
         "prefix_off": prefix_off,
         "prefix_on": prefix_on,
@@ -299,7 +330,8 @@ def main(argv=None):
            f"{'tok/pass':>9}")
     print(hdr)
     for name, row in (("pool", pool), ("pool_chunked", chunked),
-                      ("pool_paged", paged), ("lockstep", lock),
+                      ("pool_paged", paged), ("pool_kvq", kvq),
+                      ("lockstep", lock),
                       ("prefix_off", prefix_off), ("prefix_on", prefix_on),
                       ("spec_on", spec_on),
                       ("spec_on_prefix", spec_on_prefix)):
@@ -349,6 +381,20 @@ def main(argv=None):
                 f"KV bytes/token vs page=span's "
                 f"{chunked['kv_hbm_bytes_per_token']:.1f} — page-granular "
                 "freeing bought nothing"
+            )
+        if kvq_out != solo_kvq_out:
+            raise SystemExit(
+                "pool_kvq emitted different tokens than the one-slot "
+                "page=span quantized reference — the pinned KV-quant "
+                "recipe is no longer bit-reproducible across pooling, "
+                "page geometry, and write paths"
+            )
+        if kvq["kv_hbm_bytes_per_token"] > paged["kv_hbm_bytes_per_token"] / 2:
+            raise SystemExit(
+                f"PoT-quantized pages held "
+                f"{kvq['kv_hbm_bytes_per_token']:.1f} live KV bytes/token "
+                f"vs raw paged's {paged['kv_hbm_bytes_per_token']:.1f} — "
+                "the wire format must at least HALVE the footprint"
             )
         if on_out != off_out:
             raise SystemExit(

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import potq
+from repro.core.policy import KVQuantSpec
 
 
 def compress(
@@ -55,6 +56,132 @@ def decompress(code: jax.Array, beta: jax.Array, bits: int = 5) -> jax.Array:
 def wire_bytes(g: jax.Array) -> int:
     """Bytes on the wire for one tensor: 1 per element + the scalar beta."""
     return int(g.size) + 4
+
+
+# ---------------------------------------------------------------------------
+# KV-cache page wire format (serving; docs/DESIGN_serving.md §1e)
+# ---------------------------------------------------------------------------
+#
+# The same int8 code layout as the gradient path above, with three
+# serving-specific choices:
+#
+#   * the scale group is ONE WRITTEN TOKEN's (kv_heads, head_dim) K or V
+#     vector — beta depends only on the vector itself, never on which
+#     page/slot/batch it lands in, which is what makes decode
+#     bit-reproducible across page sizes, pool-vs-solo, and all three
+#     step bodies (decode/chunk/verify) *by construction*;
+#   * rounding is NEAREST (deterministic), not stochastic;
+#   * beta is clamped to [emax-126, 127-emax] at encode (and defensively
+#     at decode) so every decoded exponent stays inside exp2i's valid
+#     [-126, 127] window: stale codes in reset/evicted rows or junk
+#     scribbled by tests must dequantize to *finite* garbage — the V-path
+#     reduction multiplies masked rows by an exactly-zero softmax weight,
+#     and 0 * inf would poison it.
+#
+# Betas are stored page-shaped ((num_pages+1, page) per layer/leaf) so
+# the scale travels WITH its page through COW copies, eviction, and
+# prefix sharing without any extra bookkeeping.
+
+
+def _kv_beta_window(bits: int) -> Tuple[int, int]:
+    emax = potq.pot_emax(bits)
+    return emax - 126, 127 - emax
+
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """Pack signed-nibble codes (|code| <= 7) pairwise along the last axis.
+
+    ``codes[..., 2*i]`` goes to the low nibble, ``codes[..., 2*i+1]`` to
+    the high nibble.  The last axis must be even.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(f"cannot nibble-pack odd last dim {codes.shape[-1]}")
+    c = codes.astype(jnp.int32) & 0xF
+    return ((c[..., 1::2] << 4) | c[..., 0::2]).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles` — int32 codes, sign-extended."""
+    p = packed.astype(jnp.int32)
+    pair = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
+    flat = pair.reshape(packed.shape[:-1] + (2 * packed.shape[-1],))
+    return (flat ^ 8) - 8  # sign-extend the nibble
+
+
+def kv_code_width(spec: KVQuantSpec, head_dim: int) -> int:
+    """Trailing (head_dim) extent of the code leaf for one token."""
+    if spec.pack:
+        if head_dim % 2:
+            raise ValueError(
+                f"nibble-packed KV cache requires an even head_dim, got {head_dim}"
+            )
+        return head_dim // 2
+    return head_dim
+
+
+def kv_code_dtype(spec: KVQuantSpec):
+    return jnp.uint8 if spec.pack else jnp.int8
+
+
+def kv_page_encode(
+    f: jax.Array, spec: KVQuantSpec
+) -> Tuple[jax.Array, jax.Array]:
+    """Encode K/V vectors ``f`` of shape (..., kv_heads, head_dim).
+
+    Returns ``(codes, beta)``: codes (..., kv_heads, head_dim[/2]) in
+    the packed/unpacked int code layout, beta int32 of shape (...,) —
+    one amax scale per written token.
+
+    The quantizer input is canonicalized through bf16 first: solo-prefill
+    admission encodes from a bf16 mini cache while the step bodies encode
+    fresh f32 activations, and the two writes must produce identical
+    codes.  Decoded values are normal powers of two (exact in bf16), so
+    roundtrip idempotence is unaffected.
+    """
+    f = f.astype(jnp.bfloat16)
+    emax = potq.pot_emax(spec.bits)
+    lo, hi = _kv_beta_window(spec.bits)
+    beta = jnp.clip(potq.compute_beta(f, spec.bits, axes=(-2, -1)), lo, hi)
+    enc = potq.pot_encode(f, spec.bits, beta, stochastic=False)
+    mag = jnp.where(
+        enc.exp == potq.EXP_ZERO, 0, enc.exp.astype(jnp.int32) + emax + 1
+    )
+    code = jnp.where(enc.sign == 1, -mag, mag)
+    if spec.pack:
+        kv_code_width(spec, f.shape[-1])  # validates even head_dim
+        codes = pack_nibbles(code)
+    else:
+        codes = code.astype(jnp.int8)
+    return codes, jnp.squeeze(beta, axis=(-2, -1))
+
+
+def kv_page_decode(
+    codes: jax.Array, beta: jax.Array, spec: KVQuantSpec
+) -> jax.Array:
+    """Dequantize code leaves back to exact-PoT float32 values.
+
+    ``beta`` has the shape of ``codes`` minus the trailing (kv, hd) dims.
+    Safe on junk codes/betas: the defensive clamp keeps every decoded
+    value finite.
+    """
+    emax = potq.pot_emax(spec.bits)
+    lo, hi = _kv_beta_window(spec.bits)
+    code = unpack_nibbles(codes) if spec.pack else codes.astype(jnp.int32)
+    b = jnp.clip(beta.astype(jnp.int32), lo, hi)[..., None, None]
+    # junk codes can exceed the valid |code| range (a scribbled nibble
+    # reaches -8 where 2*emax+1 = 7); clamp so the exponent stays finite
+    mag = jnp.minimum(jnp.abs(code), 2 * emax + 1)
+    exp = mag - (emax + 1) + b
+    val = potq.exp2i(jnp.where(mag == 0, 0, exp))
+    val = jnp.where(mag == 0, 0.0, val)
+    return jnp.where(code < 0, -val, val)
+
+
+def kv_page_wire_bytes(
+    spec: KVQuantSpec, page_size: int, kv_heads: int, head_dim: int
+) -> int:
+    """HBM bytes of ONE (layer, K-or-V) page: codes + one int32 beta/token."""
+    return page_size * (kv_heads * kv_code_width(spec, head_dim) + 4)
 
 
 def compressed_psum(g: jax.Array, key: jax.Array, axis_name, bits: int = 5):

@@ -11,6 +11,44 @@ from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Wire-format recipe for PoT-quantized KV cache pages.
+
+    The *pinned recipe* (:data:`KV_PINNED`) is the one under which pooled
+    decode is bit-reproducible across page sizes and pool-vs-solo: per
+    written-token amax scale (the scale of a K or V vector depends only on
+    that vector, never on which page/slot/batch it lands in), round-to-
+    nearest log2 codes, and nibble-packed 4-bit storage.  Any other
+    (bits, pack) combination is still deterministic but only carries the
+    bounded-drift contract vs an FP cache (docs/DESIGN_serving.md §1e).
+
+    Attributes:
+      bits: PoT bit-width of the codes (1 sign + b-1 exponent bits, b>=3).
+      pack: store two codes per byte (signed nibbles along head_dim).
+        Requires bits <= 4 (|code| <= 2*emax+1 = 7) and an even head_dim.
+    """
+
+    bits: int = 4
+    pack: bool = True
+
+    def __post_init__(self) -> None:
+        if self.bits < 3:
+            raise ValueError(f"KVQuantSpec.bits must be >= 3, got {self.bits}")
+        if self.pack and self.bits > 4:
+            raise ValueError(
+                f"nibble packing requires bits <= 4 (codes must fit a signed "
+                f"nibble); got bits={self.bits}"
+            )
+
+
+#: The pinned KV-cache recipe: 4-bit PoT codes, per-token amax scale,
+#: nearest rounding, nibble-packed.  Decode under this recipe is
+#: bit-identical across {page sizes, pool-vs-solo, decode/chunk/verify
+#: write paths} — pinned by tests/conformance/test_kv_quant.py.
+KV_PINNED = KVQuantSpec(bits=4, pack=True)
+
+
+@dataclasses.dataclass(frozen=True)
 class QuantPolicy:
     """Paper-faithful defaults: 5-bit PoT on W/A/G, WBC on, PRC on.
 
@@ -62,6 +100,10 @@ class QuantPolicy:
     # unchanged.  Forward-only knob: the backward/gradient paths ignore it
     # (do not train with it; docs/DESIGN_serving.md).
     per_sample_act_scales: bool = False
+    # Serving: store pool K/V cache pages in the PoT wire format described
+    # by KVQuantSpec (None => raw fp cache).  Lives on the policy so the
+    # recipe rides the existing static-jit-arg / step-cache-key plumbing.
+    kv_quant: Optional[KVQuantSpec] = None
 
     @property
     def prc_enabled(self) -> bool:
@@ -91,6 +133,10 @@ def draft_policy(policy: QuantPolicy, bits: int = 3) -> QuantPolicy:
 
     Drafting at the serving bit-width (or for a disabled/FP policy) is a
     usage error: the draft would cost as much as the verify pass.
+
+    ``kv_quant`` is preserved: the draft pass reads/writes the same
+    quantized cache leaves as the verify pass (its writes are rolled back
+    by ``spec_restore``), so the wire format must match.
     """
     if not policy.enabled:
         raise ValueError(

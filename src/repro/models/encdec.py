@@ -305,8 +305,12 @@ def decode_step(cfg, policy, params, token, cache):
     lockstep cache (scalar ``len``, shared ``pos``), the slot-pooled
     cache (``len`` (B,), ``pos`` (B, span)) with per-slot offsets, and
     the paged layout (``table`` leaf; K/V gathered through per-slot page
-    tables — serve/slots.py)."""
-    from repro.models.transformer import _page_view, _sdpa
+    tables — serve/slots.py).  Quantized paged pools (``k_beta`` leaves)
+    encode/gather self-attention K/V through the PoT wire format; cross
+    ``ck``/``cv`` stay raw fp (written once at admission, never shared)."""
+    from repro.models.transformer import (
+        _kv_check, _kv_page_view, _kv_scatter, _page_view, _sdpa,
+    )
 
     b = token.shape[0]
     hd = cfg.head_dim
@@ -314,6 +318,8 @@ def decode_step(cfg, policy, params, token, cache):
     pos = cache["len"]
     per_slot = pos.ndim == 1
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -343,7 +349,8 @@ def decode_step(cfg, policy, params, token, cache):
     epos = jax.lax.iota(jnp.int32, se)
 
     def body(carry, lp_kv):
-        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        lp, ck_self, cv_self, ck_x, cv_x, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
         q = _proj_heads(lp, "wq", h, policy, b, 1, cfg.n_heads, hd)
         k = _proj_heads(lp, "wk", h, policy, b, 1, cfg.kv_heads, hd)
@@ -351,14 +358,12 @@ def decode_step(cfg, policy, params, token, cache):
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
         if paged:
-            ck_self = ck_self.at[dest, loff].set(
-                k[:, 0].astype(ck_self.dtype), mode="drop"
-            )
-            cv_self = cv_self.at[dest, loff].set(
-                v[:, 0].astype(cv_self.dtype), mode="drop"
-            )
-            kview = _page_view(ck_self, table, span).astype(q.dtype)
-            vview = _page_view(cv_self, table, span).astype(q.dtype)
+            ck_self, ckb = _kv_scatter(ck_self, ckb, k[:, 0], dest, loff,
+                                       spec)
+            cv_self, cvb = _kv_scatter(cv_self, cvb, v[:, 0], dest, loff,
+                                       spec)
+            kview = _kv_page_view(ck_self, ckb, table, span, spec, q.dtype)
+            vview = _kv_page_view(cv_self, cvb, table, span, spec, q.dtype)
         elif per_slot:
             ck_self = ck_self.at[rows, slot].set(k[:, 0].astype(ck_self.dtype))
             cv_self = cv_self.at[rows, slot].set(v[:, 0].astype(cv_self.dtype))
@@ -394,11 +399,15 @@ def decode_step(cfg, policy, params, token, cache):
             mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
         )
         y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
-        return y, (ck_self, cv_self)
+        out = (ck_self, cv_self) + ((ckb, cvb) if kvq else ())
+        return y, out
 
-    x, (nk, nv) = jax.lax.scan(
-        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
-    )
+    xs = (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
+          cache["cv"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(body, x, xs)
+    nk, nv = scanned[0], scanned[1]
     x = common.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
     import dataclasses as _dc
 
@@ -412,6 +421,8 @@ def decode_step(cfg, policy, params, token, cache):
     new_cache = dict(cache)
     new_cache["k"] = nk
     new_cache["v"] = nv
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     new_cache["pos"] = kpos
     new_cache["len"] = pos + 1
     return logits, new_cache
@@ -427,13 +438,17 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
     a per-position final norm + tied LM head).  Slot-pooled and paged
     caches only; encdec is never windowed.  Returns (logits (B, C, V),
     new cache with ``len = len + n_new``)."""
-    from repro.models.transformer import _page_view, _sdpa
+    from repro.models.transformer import (
+        _kv_check, _kv_page_view, _kv_scatter, _page_view, _sdpa,
+    )
 
     b, c = tokens.shape
     hd = cfg.head_dim
     pos0 = cache["len"]
     assert pos0.ndim == 1, "verify_step requires the slot-pooled cache layout"
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -481,7 +496,8 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
     epos = jax.lax.iota(jnp.int32, se)
 
     def body(carry, lp_kv):
-        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        lp, ck_self, cv_self, ck_x, cv_x, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         outs = []
         for i in range(c):
             xi = carry[:, i:i + 1, :]
@@ -493,14 +509,14 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
             q = common.rope(q, pq, cfg.rope_theta)
             k = common.rope(k, pq, cfg.rope_theta)
             if paged:
-                ck_self = ck_self.at[dests[i], loffs[i]].set(
-                    k[:, 0].astype(ck_self.dtype), mode="drop"
-                )
-                cv_self = cv_self.at[dests[i], loffs[i]].set(
-                    v[:, 0].astype(cv_self.dtype), mode="drop"
-                )
-                kview = _page_view(ck_self, table, span).astype(q.dtype)
-                vview = _page_view(cv_self, table, span).astype(q.dtype)
+                ck_self, ckb = _kv_scatter(ck_self, ckb, k[:, 0], dests[i],
+                                           loffs[i], spec)
+                cv_self, cvb = _kv_scatter(cv_self, cvb, v[:, 0], dests[i],
+                                           loffs[i], spec)
+                kview = _kv_page_view(ck_self, ckb, table, span, spec,
+                                      q.dtype)
+                vview = _kv_page_view(cv_self, cvb, table, span, spec,
+                                      q.dtype)
             else:
                 ck_self = ck_self.at[rows, sidxs[i]].set(
                     k[:, 0].astype(ck_self.dtype), mode="drop"
@@ -535,13 +551,15 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
             y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"],
                                     policy=policy)
             outs.append(y)
-        return jnp.concatenate(outs, axis=1), (ck_self, cv_self)
+        out = (ck_self, cv_self) + ((ckb, cvb) if kvq else ())
+        return jnp.concatenate(outs, axis=1), out
 
-    x, (nk, nv) = jax.lax.scan(
-        body, x,
-        (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
-         cache["cv"]),
-    )
+    xs = (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
+          cache["cv"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(body, x, xs)
+    nk, nv = scanned[0], scanned[1]
     import dataclasses as _dc
 
     _pol2 = (_dc.replace(policy, weights_prequantized=False)
@@ -561,6 +579,8 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
     new_cache = dict(cache)
     new_cache["k"] = nk
     new_cache["v"] = nv
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     new_cache["pos"] = kpos_phys
     new_cache["len"] = pos0 + n_new
     return logits, new_cache
@@ -591,13 +611,17 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     qpos -1, dropped scatters, per-row determinism).  Cross-attention
     reads the per-slot ``ck``/``cv`` written at admission by
     :func:`encode_cross_kv`."""
-    from repro.models.transformer import _page_view, _sdpa
+    from repro.models.transformer import (
+        _kv_check, _kv_page_view, _kv_scatter, _page_view, _sdpa,
+    )
 
     b, c = tokens.shape
     hd = cfg.head_dim
     pos0 = cache["len"]
     assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -631,7 +655,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     epos = jax.lax.iota(jnp.int32, se)
 
     def body(carry, lp_kv):
-        lp, ck_self, cv_self, ck_x, cv_x = lp_kv
+        lp, ck_self, cv_self, ck_x, cv_x, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         h = common.layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
         # zero pads before the projections: each row's activation-scale
         # group amax must equal decode_step's (1, D) group so decode rows
@@ -643,10 +668,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
         q = common.rope(q, qpos, cfg.rope_theta)
         k = common.rope(k, qpos, cfg.rope_theta)
         if paged:
-            nk = ck_self.at[dest, loff].set(k.astype(ck_self.dtype),
-                                            mode="drop")
-            nv = cv_self.at[dest, loff].set(v.astype(cv_self.dtype),
-                                            mode="drop")
+            nk, nkb = _kv_scatter(ck_self, ckb, k, dest, loff, spec)
+            nv, nvb = _kv_scatter(cv_self, cvb, v, dest, loff, spec)
         else:
             nk = ck_self.at[rows[:, None], sidx].set(
                 k.astype(ck_self.dtype), mode="drop"
@@ -657,11 +680,16 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
         # scatter-then-attend over the post-scatter span view — the same
         # reduction decode_step performs (decode fast-path bit-equality);
         # encdec is never windowed, so no ring wrap can occur
-        kv_k = _page_view(nk, table, span) if paged else nk
-        kv_v = _page_view(nv, table, span) if paged else nv
+        if kvq:
+            kv_k = _kv_page_view(nk, nkb, table, span, spec, q.dtype)
+            kv_v = _kv_page_view(nv, nvb, table, span, spec, q.dtype)
+        else:
+            kv_k = (_page_view(nk, table, span) if paged else nk
+                    ).astype(q.dtype)
+            kv_v = (_page_view(nv, table, span) if paged else nv
+                    ).astype(q.dtype)
         att = _sdpa(
-            cfg, policy, q, kv_k.astype(q.dtype), kv_v.astype(q.dtype),
-            qpos, kpos_view, None,
+            cfg, policy, q, kv_k, kv_v, qpos, kpos_view, None,
         )
         # Pad queries' all-False mask degenerates softmax to a uniform
         # average over every key — stale K/V from a reused slot included.
@@ -695,12 +723,15 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             mfmac.mf_linear(h2, lp["wi"]["w"], lp["wi"]["gamma"], policy=policy)
         )
         y = y + mfmac.mf_linear(m, lp["wo2"]["w"], lp["wo2"]["gamma"], policy=policy)
-        return y, (nk, nv)
+        out = (nk, nv) + ((nkb, nvb) if kvq else ())
+        return y, out
 
-    x, (nk, nv) = jax.lax.scan(
-        body, x,
-        (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
-    )
+    xs = (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
+          cache["cv"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(body, x, xs)
+    nk, nv = scanned[0], scanned[1]
     emit = jnp.clip(n_new - 1, 0, c - 1)
     xe = x[rows, emit][:, None, :]
     xe = common.layer_norm(
@@ -718,6 +749,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     new_cache = dict(cache)
     new_cache["k"] = nk
     new_cache["v"] = nv
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     new_cache["pos"] = kpos_new
     new_cache["len"] = pos0 + n_new
     return logits, new_cache

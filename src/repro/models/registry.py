@@ -99,7 +99,8 @@ def pool_span(cfg: ModelConfig, max_len: int) -> int:
 
 
 def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
-                    dtype=jnp.bfloat16, *, page_size=None, num_pages=None):
+                    dtype=jnp.bfloat16, *, page_size=None, num_pages=None,
+                    kv_quant=None):
     """Pooled decode cache, built ONCE per engine.
 
     Attention families (``PAGED_FAMILIES``) get the block-table paged
@@ -107,9 +108,11 @@ def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
     positions (default: the whole span — one page per slot, the
     legacy-equivalent geometry), ``num_pages`` physical pages (default
     ``max_slots * span/page_size``, capacity-neutral) plus the null page,
-    and a (max_slots, span/page_size) page table.  Recurrent families
-    keep the lifted slot-row layout (per-slot ``pos``/``len``); their
-    callers must leave ``page_size``/``num_pages`` unset.
+    and a (max_slots, span/page_size) page table.  ``kv_quant`` (a
+    ``core.policy.KVQuantSpec``) stores K/V pages in the PoT wire format
+    with per-token ``k_beta``/``v_beta`` scale leaves.  Recurrent
+    families keep the lifted slot-row layout (per-slot ``pos``/``len``);
+    their callers must leave the paged knobs unset.
     """
     if cfg.family not in POOLED_FAMILIES:
         raise NotImplementedError(
@@ -122,9 +125,10 @@ def init_pool_cache(cfg: ModelConfig, max_slots: int, max_len: int,
     if cfg.family in PAGED_FAMILIES:
         span = pool_span(cfg, max_len)
         return slots.page_pool_cache(
-            base, max_slots, page_size or span, num_pages
+            base, max_slots, page_size or span, num_pages,
+            kv_quant=kv_quant,
         )
-    if page_size is not None or num_pages is not None:
+    if page_size is not None or num_pages is not None or kv_quant is not None:
         raise ValueError(
             f"family {cfg.family!r} has no paged cache "
             f"(paged: {PAGED_FAMILIES})"

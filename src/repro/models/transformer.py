@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import mfmac
+from repro.core import compress, mfmac
 from repro.core.policy import QuantPolicy
 from repro.models import common
 from repro.models.spec import ParamSpec
@@ -463,6 +463,44 @@ def _page_view(leaf, table, span):
     return x.reshape((b, span) + x.shape[3:])
 
 
+def _kv_check(policy, cache):
+    """Is this cache PoT-quantized (serve/slots.py wire format)?  The
+    recipe rides the policy (static jit arg); quantization applies iff
+    the cache carries the beta scale leaves — a raw cache under a
+    kv_quant policy (solo prefill mini caches) stays fp."""
+    kvq = isinstance(cache, dict) and "k_beta" in cache
+    if kvq and policy.kv_quant is None:
+        raise ValueError(
+            "cache holds quantized K/V pages but policy.kv_quant is None"
+        )
+    return kvq
+
+
+def _kv_scatter(ck, cb, vals, dest, loff, spec):
+    """Scatter freshly computed K or V vectors (B[, C], KV, hd) into a
+    physical page store at (dest, loff) — PoT-encoding them (and their
+    per-token betas into ``cb``) when ``spec`` is set."""
+    if spec is None:
+        return ck.at[dest, loff].set(vals.astype(ck.dtype), mode="drop"), cb
+    codes, beta = compress.kv_page_encode(vals, spec)
+    ck = ck.at[dest, loff].set(codes, mode="drop")
+    cb = cb.at[dest, loff].set(beta, mode="drop")
+    return ck, cb
+
+
+def _kv_page_view(ck, cb, table, span, spec, dtype):
+    """Gathered logical (B, span, KV, hd) K/V view, dequantized to exact
+    PoT float values when ``spec`` is set.  Those values feed the existing
+    fixed-order ``_sdpa`` reductions unchanged: exact-PoT operands in the
+    highest-precision dot ARE the MF-MAC shift-add datapath (the same
+    realization the weight path uses — docs/DESIGN_kernels.md)."""
+    view = _page_view(ck, table, span)
+    if spec is None:
+        return view.astype(dtype)
+    bview = _page_view(cb, table, span)
+    return compress.kv_page_decode(view, bview, spec).astype(dtype)
+
+
 def decode_step(cfg, policy, params, token, cache):
     """One decode step.  token: (B,) int32 -> (logits (B, V), new cache).
 
@@ -491,6 +529,8 @@ def decode_step(cfg, policy, params, token, cache):
     pos = cache["len"]
     per_slot = pos.ndim == 1
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -521,7 +561,8 @@ def decode_step(cfg, policy, params, token, cache):
         pq = jnp.broadcast_to(qpos[None, :], (b, 1))
 
     def carry_block(carry, lp_kv):
-        lp, ck, cv = lp_kv
+        lp, ck, cv, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         h = common.apply_norm(cfg.norm, carry, lp["ln1"])
         # project new token
         q = mfmac.mf_linear(h, lp["wq"]["w"], lp["wq"]["gamma"], policy=policy)
@@ -533,10 +574,10 @@ def decode_step(cfg, policy, params, token, cache):
         q = common.rope(q, pq, cfg.rope_theta)
         k = common.rope(k, pq, cfg.rope_theta)
         if paged:
-            ck = ck.at[dest, loff].set(k[:, 0].astype(ck.dtype), mode="drop")
-            cv = cv.at[dest, loff].set(v[:, 0].astype(cv.dtype), mode="drop")
-            kview = _page_view(ck, table, span).astype(q.dtype)
-            vview = _page_view(cv, table, span).astype(q.dtype)
+            ck, ckb = _kv_scatter(ck, ckb, k[:, 0], dest, loff, spec)
+            cv, cvb = _kv_scatter(cv, cvb, v[:, 0], dest, loff, spec)
+            kview = _kv_page_view(ck, ckb, table, span, spec, q.dtype)
+            vview = _kv_page_view(cv, cvb, table, span, spec, q.dtype)
         elif per_slot:
             ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
             cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
@@ -559,19 +600,23 @@ def decode_step(cfg, policy, params, token, cache):
             y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
         else:
             y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
-        return y, (ck, cv)
+        out = (ck, cv) + ((ckb, cvb) if kvq else ())
+        return y, out
 
-    x, (nk, nv) = jax.lax.scan(
-        carry_block, x, (params["layers"], cache["k"], cache["v"])
-    )
+    xs = (params["layers"], cache["k"], cache["v"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(carry_block, x, xs)
     x = common.apply_norm(cfg.norm, x, params["final_norm"])
     logits = _lm_head(cfg, policy, params, x)[:, 0, :]
     new_cache = {
-        "k": nk,
-        "v": nv,
+        "k": scanned[0],
+        "v": scanned[1],
         "pos": kpos_new,
         "len": pos + 1,
     }
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     if paged:
         new_cache["table"] = table
     return logits, new_cache
@@ -610,6 +655,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     pos0 = cache["len"]
     assert pos0.ndim == 1, "chunk_step requires the slot-pooled cache layout"
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -648,7 +695,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     windowed = cfg.window is not None
 
     def carry_block(carry, lp_kv):
-        lp, ck, cv = lp_kv
+        lp, ck, cv, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         h = common.apply_norm(cfg.norm, carry, lp["ln1"])
         # Zero pad positions BEFORE the projections: each row's
         # activation-scale group is its (C, D) block, so with pads
@@ -665,8 +713,8 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
         q = common.rope(q, qpos, cfg.rope_theta)
         k = common.rope(k, qpos, cfg.rope_theta)
         if paged:
-            nk = ck.at[dest, loff].set(k.astype(ck.dtype), mode="drop")
-            nv = cv.at[dest, loff].set(v.astype(cv.dtype), mode="drop")
+            nk, nkb = _kv_scatter(ck, ckb, k, dest, loff, spec)
+            nv, nvb = _kv_scatter(cv, cvb, v, dest, loff, spec)
         else:
             nk = ck.at[rows[:, None], sidx].set(k.astype(ck.dtype),
                                                 mode="drop")
@@ -676,11 +724,25 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             # attend over [old cache ∪ fresh chunk]: old entries hold
             # only positions < pos0, fresh ones >= pos0 (qpos -1 where
             # invalid), so the position mask sees each key exactly once
-            # even when the ring wraps mid-chunk
-            ok = _page_view(ck, table, span) if paged else ck
-            ov = _page_view(cv, table, span) if paged else cv
-            k_all = jnp.concatenate([ok.astype(q.dtype), k], axis=1)
-            v_all = jnp.concatenate([ov.astype(q.dtype), v], axis=1)
+            # even when the ring wraps mid-chunk.  In the quantized
+            # layout the fresh in-chunk K/V is re-read through the wire
+            # format (encode-then-decode) so every attended key is the
+            # same PoT value later steps will gather — the chunked
+            # admission must reproduce the incremental write paths bit
+            # for bit.
+            if kvq:
+                ok = _kv_page_view(ck, ckb, table, span, spec, q.dtype)
+                ov = _kv_page_view(cv, cvb, table, span, spec, q.dtype)
+                kc, kb = compress.kv_page_encode(k, spec)
+                vc, vb = compress.kv_page_encode(v, spec)
+                kf = compress.kv_page_decode(kc, kb, spec).astype(q.dtype)
+                vf = compress.kv_page_decode(vc, vb, spec).astype(q.dtype)
+            else:
+                ok = _page_view(ck, table, span) if paged else ck
+                ov = _page_view(cv, table, span) if paged else cv
+                kf, vf = k, v
+            k_all = jnp.concatenate([ok.astype(q.dtype), kf], axis=1)
+            v_all = jnp.concatenate([ov.astype(q.dtype), vf], axis=1)
             kpos_all = jnp.concatenate([kpos_old, qpos], axis=1)
             att = _sdpa(
                 cfg, policy, q, k_all, v_all, qpos, kpos_all, cfg.window
@@ -689,11 +751,16 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             # scatter-then-attend over the post-scatter span view — the
             # identical reduction decode_step performs (decode fast-path
             # bit-equality); no window => no ring wrap => safe
-            kv_k = _page_view(nk, table, span) if paged else nk
-            kv_v = _page_view(nv, table, span) if paged else nv
+            if kvq:
+                kv_k = _kv_page_view(nk, nkb, table, span, spec, q.dtype)
+                kv_v = _kv_page_view(nv, nvb, table, span, spec, q.dtype)
+            else:
+                kv_k = (_page_view(nk, table, span) if paged else nk
+                        ).astype(q.dtype)
+                kv_v = (_page_view(nv, table, span) if paged else nv
+                        ).astype(q.dtype)
             att = _sdpa(
-                cfg, policy, q, kv_k.astype(q.dtype), kv_v.astype(q.dtype),
-                qpos, kpos_view, None,
+                cfg, policy, q, kv_k, kv_v, qpos, kpos_view, None,
             )
         att = att.reshape(b, c, cfg.n_heads * cfg.head_dim)
         # A pad query's mask is all-False => softmax degenerates to a
@@ -712,11 +779,13 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
             y = y + _moe_apply(cfg, policy, lp["moe"], h2, per_slot=True)
         else:
             y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
-        return y, (nk, nv)
+        out = (nk, nv) + ((nkb, nvb) if kvq else ())
+        return y, out
 
-    x, (nk, nv) = jax.lax.scan(
-        carry_block, x, (params["layers"], cache["k"], cache["v"])
-    )
+    xs = (params["layers"], cache["k"], cache["v"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(carry_block, x, xs)
     # emit at each slot's last valid position (gather BEFORE the head so
     # its activation-scale group is the (1, D) row, same as decode_step)
     emit = jnp.clip(n_new - 1, 0, c - 1)
@@ -724,11 +793,13 @@ def chunk_step(cfg, policy, params, tokens, n_new, cache):
     xe = common.apply_norm(cfg.norm, xe, params["final_norm"])
     logits = _lm_head(cfg, policy, params, xe)[:, 0, :]
     new_cache = {
-        "k": nk,
-        "v": nv,
+        "k": scanned[0],
+        "v": scanned[1],
         "pos": kpos_new,
         "len": pos0 + n_new,
     }
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     if paged:
         new_cache["table"] = table
     return logits, new_cache
@@ -770,6 +841,8 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
     pos0 = cache["len"]
     assert pos0.ndim == 1, "verify_step requires the slot-pooled cache layout"
     paged = "table" in cache
+    kvq = _kv_check(policy, cache)
+    spec = policy.kv_quant if kvq else None
     if paged:
         table = cache["table"]  # (B, n)
         page = cache["pos"].shape[1]
@@ -819,7 +892,8 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
             kpos_views.append(kpos_phys)
 
     def carry_block(carry, lp_kv):
-        lp, ck, cv = lp_kv
+        lp, ck, cv, *betas = lp_kv
+        ckb, cvb = betas if kvq else (None, None)
         outs = []
         for i in range(c):
             xi = carry[:, i:i + 1, :]  # (B, 1, D) — decode's input shape
@@ -837,14 +911,12 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
             q = common.rope(q, pq, cfg.rope_theta)
             k = common.rope(k, pq, cfg.rope_theta)
             if paged:
-                ck = ck.at[dests[i], loffs[i]].set(
-                    k[:, 0].astype(ck.dtype), mode="drop"
-                )
-                cv = cv.at[dests[i], loffs[i]].set(
-                    v[:, 0].astype(cv.dtype), mode="drop"
-                )
-                kview = _page_view(ck, table, span).astype(q.dtype)
-                vview = _page_view(cv, table, span).astype(q.dtype)
+                ck, ckb = _kv_scatter(ck, ckb, k[:, 0], dests[i], loffs[i],
+                                      spec)
+                cv, cvb = _kv_scatter(cv, cvb, v[:, 0], dests[i], loffs[i],
+                                      spec)
+                kview = _kv_page_view(ck, ckb, table, span, spec, q.dtype)
+                vview = _kv_page_view(cv, cvb, table, span, spec, q.dtype)
             else:
                 ck = ck.at[rows, sidxs[i]].set(
                     k[:, 0].astype(ck.dtype), mode="drop"
@@ -865,11 +937,13 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
             else:
                 y = y + _mlp_apply(cfg, policy, lp["mlp"], h2)
             outs.append(y)
-        return jnp.concatenate(outs, axis=1), (ck, cv)
+        out = (ck, cv) + ((ckb, cvb) if kvq else ())
+        return jnp.concatenate(outs, axis=1), out
 
-    x, (nk, nv) = jax.lax.scan(
-        carry_block, x, (params["layers"], cache["k"], cache["v"])
-    )
+    xs = (params["layers"], cache["k"], cache["v"])
+    if kvq:
+        xs = xs + (cache["k_beta"], cache["v_beta"])
+    x, scanned = jax.lax.scan(carry_block, x, xs)
     # per-position head: each (B, 1, D) slice keeps decode's (1, D)
     # activation-scale group through the final norm and LM head
     logits = []
@@ -879,11 +953,13 @@ def verify_step(cfg, policy, params, tokens, n_new, cache):
         logits.append(_lm_head(cfg, policy, params, xe)[:, 0, :])
     logits = jnp.stack(logits, axis=1)  # (B, C, V)
     new_cache = {
-        "k": nk,
-        "v": nv,
+        "k": scanned[0],
+        "v": scanned[1],
         "pos": kpos_phys,
         "len": pos0 + n_new,
     }
+    if kvq:
+        new_cache["k_beta"], new_cache["v_beta"] = scanned[2], scanned[3]
     if paged:
         new_cache["table"] = table
     return logits, new_cache

@@ -145,6 +145,12 @@ class ShardingPlan:
     # shapes (num_pages+1 physical pages of page_size) would not match.
     page_size: Optional[int] = None
     num_pages: Optional[int] = None
+    # PoT-quantized KV wire format the pool cache specs were keyed by
+    # (core.policy.KVQuantSpec.bits; None = raw fp cache).  Like page
+    # geometry: a quantized cache has different leaf shapes/dtypes (int
+    # code pages + k_beta/v_beta scale leaves), so an engine whose
+    # kv_quant disagrees must refuse the plan.
+    kv_bits: Optional[int] = None
 
     # -- shardings ---------------------------------------------------------
     def named(self, spec: P) -> NamedSharding:
@@ -243,7 +249,8 @@ def _moe_decision(spec_axes, pspec: P, mesh) -> Optional[str]:
 def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
              pool_slots: Optional[int] = None,
              page_size: Optional[int] = None,
-             num_pages: Optional[int] = None) -> ShardingPlan:
+             num_pages: Optional[int] = None,
+             kv_quant=None) -> ShardingPlan:
     """Build (and by default validate) the plan for ``cfg`` on ``mesh``.
 
     ``shape`` (a ``ShapeConfig``) additionally plans the batch dict, and —
@@ -261,6 +268,11 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
     page stores (num_pages+1, page_size) instead of slot rows, and the
     resolved geometry is recorded on the plan so a :class:`PoolEngine`
     built with different paging refuses it up front.
+
+    ``kv_quant`` (a ``core.policy.KVQuantSpec``) keys a pool plan by the
+    quantized-KV wire format the same way: code-page leaves + per-token
+    ``k_beta``/``v_beta`` scale leaves (replicated per the ``cache_pspecs``
+    name rules — they are tiny int32), recorded as ``plan.kv_bits``.
     """
     # local imports: keep repro.parallel importable without the model zoo
     from repro.data import pipeline
@@ -308,6 +320,7 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
                     lambda: registry.init_pool_cache(
                         cfg, pool_slots, shape.seq_len,
                         page_size=page_size, num_pages=num_pages,
+                        kv_quant=kv_quant,
                     )
                 )
             else:
@@ -331,6 +344,7 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
         moe=moe, report=tuple(report), shape=shape,
         cache_abstract=abstract_cache, specs=specs, pool_slots=pool_slots,
         page_size=page_size, num_pages=num_pages,
+        kv_bits=kv_quant.bits if kv_quant is not None else None,
     )
     if validate:
         plan.validate()

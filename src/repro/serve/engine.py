@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import compress
 from repro.core.policy import QuantPolicy, draft_policy
 from repro.models import registry
 from repro.parallel import actshard
@@ -488,6 +489,7 @@ class PoolEngine:
                  num_pages: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec=None,
+                 kv_quant=None,
                  plan: Optional[ShardingPlan] = None):
         if cfg.family not in registry.POOLED_FAMILIES:
             raise NotImplementedError(
@@ -533,6 +535,20 @@ class PoolEngine:
                 f"{registry.PAGED_FAMILIES}); drop page_size/num_pages/"
                 "prefix_cache"
             )
+        # PoT-quantized KV pages (core.policy.KVQuantSpec): the kwarg wins,
+        # else a recipe already on the policy applies; either way the spec
+        # is pushed onto the policy so every step body (and the step cache
+        # key) sees it as a static jit argument.
+        kv_quant = kv_quant if kv_quant is not None else policy.kv_quant
+        if kv_quant is not None:
+            if not self.paged:
+                raise ValueError(
+                    f"kv_quant: family {cfg.family!r} has no paged KV cache "
+                    f"to quantize (paged: {registry.PAGED_FAMILIES})"
+                )
+            compress.kv_code_width(kv_quant, cfg.head_dim)  # even-hd check
+        self.kv_quant = kv_quant
+        policy = dataclasses.replace(policy, kv_quant=kv_quant)
         if self.paged:
             span = registry.pool_span(cfg, max_len)
             self.page_size = page_size or span
@@ -587,6 +603,15 @@ class PoolEngine:
                     f"engine uses (page_size={self.page_size}, "
                     f"num_pages={self.num_pages}); rebuild the plan with "
                     "planner.plan_for(..., page_size=..., num_pages=...)"
+                )
+            plan_bits = getattr(plan, "kv_bits", None)
+            eng_bits = kv_quant.bits if kv_quant is not None else None
+            if plan_bits != eng_bits:
+                raise ValueError(
+                    f"PoolEngine plan was built for kv_bits={plan_bits} but "
+                    f"the engine quantizes at kv_bits={eng_bits}; rebuild "
+                    "the plan with planner.plan_for(..., kv_quant=...) — "
+                    "quantized caches have different leaf shapes/dtypes"
                 )
         self.cfg = cfg
         self.policy = policy
@@ -687,7 +712,9 @@ class PoolEngine:
         batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         logits, mini = self._prefill(self.params, batch, mini)
         tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
-        cache = slots_lib.write_slot(cache, mini, slot, pages=pages)
+        cache = slots_lib.write_slot(
+            cache, mini, slot, pages=pages, kv_quant=self.kv_quant
+        )
         return cache, tok
 
     def _chunkable(self, req: Request) -> bool:
@@ -763,7 +790,9 @@ class PoolEngine:
             idx = jnp.asarray(hold["new"], jnp.int32)
             cache["pos"] = cache["pos"].at[idx].set(-1)
         for src, dst in hold["copies"]:
-            for key in ("k", "v"):
+            leaves = ("k", "v") + (("k_beta", "v_beta")
+                                   if self.kv_quant is not None else ())
+            for key in leaves:
                 cache[key] = cache[key].at[:, dst].set(cache[key][:, src])
             sp = cache["pos"][src]
             cache["pos"] = cache["pos"].at[dst].set(
@@ -791,11 +820,21 @@ class PoolEngine:
                 self.max_slots,
             )
             stats.page_size = self.page_size
-            dt = jnp.dtype(self.cache_dtype).itemsize
-            stats.kv_page_bytes = (
-                2 * self.cfg.n_layers * self.page_size
-                * self.cfg.kv_heads * self.cfg.head_dim * dt
-            )
+            if self.kv_quant is not None:
+                # wire format: nibble/byte codes + one int32 beta per token,
+                # per layer per K/V leaf (core.compress.kv_page_wire_bytes)
+                stats.kv_page_bytes = (
+                    2 * self.cfg.n_layers * compress.kv_page_wire_bytes(
+                        self.kv_quant, self.page_size, self.cfg.kv_heads,
+                        self.cfg.head_dim,
+                    )
+                )
+            else:
+                dt = jnp.dtype(self.cache_dtype).itemsize
+                stats.kv_page_bytes = (
+                    2 * self.cfg.n_layers * self.page_size
+                    * self.cfg.kv_heads * self.cfg.head_dim * dt
+                )
         out: Dict = {r.uid: [] for r in requests}
         remaining: Dict[int, int] = {}  # slot -> tokens still to emit
         pending: Dict[int, np.ndarray] = {}  # slot -> unconsumed prompt
@@ -857,7 +896,8 @@ class PoolEngine:
                 self._build_spec_steps()  # plan mode: build inside the ctx
             cache = registry.init_pool_cache(
                 self.cfg, self.max_slots, self.max_len, self.cache_dtype,
-                **({"page_size": self.page_size, "num_pages": self.num_pages}
+                **({"page_size": self.page_size, "num_pages": self.num_pages,
+                    "kv_quant": self.kv_quant}
                    if self.paged else {}),
             )
             if alloc is not None:

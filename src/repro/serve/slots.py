@@ -49,6 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compress
+from repro.core.policy import KVQuantSpec
+
 
 # ---------------------------------------------------------------------------
 # Legacy slot-row layout (ssm / hybrid, and any unpaged pool cache)
@@ -93,7 +96,8 @@ def drop_id(pool_or_num_pages) -> int:
 
 
 def page_pool_cache(cache, max_slots: int, page_size: int,
-                    num_pages: Optional[int] = None):
+                    num_pages: Optional[int] = None,
+                    kv_quant: Optional[KVQuantSpec] = None):
     """Turn a fresh ``registry.init_cache(cfg, max_slots, max_len)`` tree
     into the paged pool layout.
 
@@ -102,6 +106,13 @@ def page_pool_cache(cache, max_slots: int, page_size: int,
     ``len`` per pool slot; a ``table`` leaf maps (slot, logical page) ->
     physical page.  Slot-rowed leaves (encdec's cross ``ck``/``cv``) are
     left alone — they are written once per admission and never shared.
+
+    With ``kv_quant`` the K/V stores hold the PoT wire format instead
+    (core/compress.py): ``k``/``v`` become int code pages
+    (L, num_pages+1, page, KV, hd[/2]) plus per-token scale leaves
+    ``k_beta``/``v_beta`` of shape (L, num_pages+1, page) — page-shaped,
+    so a page's scales travel with it through COW/eviction/prefix-sharing
+    with zero extra bookkeeping.  Cross ``ck``/``cv`` stay raw fp.
 
     With the default ``num_pages = max_slots * pages_per_slot`` the table
     is initialized to the identity mapping (slot i owns pages
@@ -136,6 +147,12 @@ def page_pool_cache(cache, max_slots: int, page_size: int,
         key = str(getattr(path[-1], "key", "")) if path else ""
         if key in ("k", "v"):
             L, _, _, kv, hd = x.shape
+            if kv_quant is not None:
+                hdw = compress.kv_code_width(kv_quant, hd)
+                return jnp.zeros(
+                    (L, num_pages + 1, page_size, kv, hdw),
+                    compress.kv_code_dtype(kv_quant),
+                )
             return jnp.zeros((L, num_pages + 1, page_size, kv, hd), x.dtype)
         if key == "pos":
             return jnp.full((num_pages + 1, page_size), -1, jnp.int32)
@@ -144,6 +161,10 @@ def page_pool_cache(cache, max_slots: int, page_size: int,
         return x
 
     out = dict(jax.tree_util.tree_map_with_path(one, cache))
+    if kv_quant is not None:
+        L = out["k"].shape[0]
+        for key in ("k_beta", "v_beta"):
+            out[key] = jnp.zeros((L, num_pages + 1, page_size), jnp.int32)
     if num_pages == max_slots * n:
         table = np.arange(max_slots * n, dtype=np.int32).reshape(max_slots, n)
     else:
@@ -188,7 +209,8 @@ def reset_slot(pool, slot: int):
     return jax.tree_util.tree_map_with_path(one, pool)
 
 
-def write_slot(pool, mini, slot: int, *, pages: Optional[Sequence[int]] = None):
+def write_slot(pool, mini, slot: int, *, pages: Optional[Sequence[int]] = None,
+               kv_quant: Optional[KVQuantSpec] = None):
     """Copy a batch-1 cache (``registry.init_cache(cfg, 1, max_len)`` after
     a solo prefill) into ``slot`` of the pool cache.
 
@@ -198,9 +220,13 @@ def write_slot(pool, mini, slot: int, *, pages: Optional[Sequence[int]] = None):
     pages; direct callers default to the existing row, which a fresh
     default pool initializes to the identity mapping).  Slot-rowed leaves
     (encdec ``ck``/``cv``) are row-assigned as before.
+
+    A quantized pool (``kv_quant`` — must match the pool's wire format)
+    encodes the raw fp mini K/V per written token on the way in; the
+    per-token betas land in the slot's page rows of ``k_beta``/``v_beta``.
     """
     if is_paged(pool):
-        return _write_slot_paged(pool, mini, slot, pages)
+        return _write_slot_paged(pool, mini, slot, pages, kv_quant)
 
     def one(p, m):
         m = m.astype(p.dtype)
@@ -219,9 +245,14 @@ def write_slot(pool, mini, slot: int, *, pages: Optional[Sequence[int]] = None):
     return jax.tree_util.tree_map(one, pool, mini)
 
 
-def _write_slot_paged(pool, mini, slot, pages):
+def _write_slot_paged(pool, mini, slot, pages, kv_quant=None):
     page = pool["pos"].shape[1]
     n = pool["table"].shape[1]
+    if ("k_beta" in pool) != (kv_quant is not None):
+        raise ValueError(
+            "write_slot kv_quant must be given exactly when the pool holds "
+            "quantized K/V pages"
+        )
     if pages is None:
         pids = pool["table"][slot]
     else:
@@ -230,9 +261,16 @@ def _write_slot_paged(pool, mini, slot, pages):
     out = dict(pool)
     out["table"] = pool["table"].at[slot].set(pids)
     for key in ("k", "v"):
-        m = mini[key].astype(pool[key].dtype)  # (L, 1, span, KV, hd)
+        m = mini[key]  # (L, 1, span, KV, hd)
         L, _, span, kv, hd = m.shape
-        mp = m.reshape(L, n, page, kv, hd)
+        if kv_quant is not None:
+            codes, beta = compress.kv_page_encode(m, kv_quant)
+            mp = codes.reshape((L, n, page, kv) + codes.shape[4:])
+            bp = beta.reshape(L, n, page)
+            bkey = f"{key}_beta"
+            out[bkey] = pool[bkey].at[:, pids].set(bp, mode="drop")
+        else:
+            mp = m.astype(pool[key].dtype).reshape(L, n, page, kv, hd)
         out[key] = pool[key].at[:, pids].set(mp, mode="drop")
     mpos = mini["pos"].reshape(n, page)  # (span,) -> per-page rows
     out["pos"] = pool["pos"].at[pids].set(mpos, mode="drop")
@@ -579,12 +617,16 @@ def spec_snapshot(cache, c: int):
     pos0 = cache["len"]
     dest, off = _spec_addr(cache, c, pos0)
     if dest is not None:  # paged: k (L, P+1, page, KV, hd)
-        return {
+        snap = {
             "k": cache["k"][:, dest, off],
             "v": cache["v"][:, dest, off],
             "pos": cache["pos"][dest, off],
             "len": pos0,
         }
+        for key in ("k_beta", "v_beta"):  # quantized: per-token scales
+            if key in cache:
+                snap[key] = cache[key][:, dest, off]
+        return snap
     rows = jnp.arange(off.shape[0])[:, None]
     return {
         "k": cache["k"][:, rows, off],
@@ -613,6 +655,11 @@ def spec_restore(cache, snap, keep):
         out["k"] = cache["k"].at[:, dest, off].set(snap["k"], mode="drop")
         out["v"] = cache["v"].at[:, dest, off].set(snap["v"], mode="drop")
         out["pos"] = cache["pos"].at[dest, off].set(snap["pos"], mode="drop")
+        for key in ("k_beta", "v_beta"):
+            if key in cache:
+                out[key] = cache[key].at[:, dest, off].set(
+                    snap[key], mode="drop"
+                )
     else:
         span = cache["k"].shape[2]
         rows = jnp.arange(off.shape[0])[:, None]

@@ -17,6 +17,13 @@ The matrix required by the PR: {llama3, mistral-nemo-12b@w8 (sliding
 -window ring)} x {jnp, pallas} x {page None (= span), small pages} x both
 drafters, plus encdec, chunked-prefill coexistence, EOS-mid-draft, and
 stats sanity (speculation must only ever LOWER the weight-pass count).
+
+With PoT-quantized KV pages (``kv_quant=KV_PINNED``) the same invariant
+must hold over the wire format: a spec round's draft/verify writes land
+as (codes, beta) pairs and ``spec_snapshot``/``spec_restore`` roundtrip
+the beta leaves alongside the codes, so spec-on output stays
+byte-identical to spec-off on a quantized pool too (both drafters, ring
+included) — pinned by the ``_kvq`` cells below.
 """
 import dataclasses
 
@@ -25,7 +32,7 @@ import numpy as np
 import pytest
 
 from repro import configs as C
-from repro.core.policy import PAPER_FAITHFUL
+from repro.core.policy import KV_PINNED, PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
 from repro.serve import LowBitSelfDraft, NgramDrafter, PoolEngine, Request
 
@@ -71,40 +78,47 @@ def _requests(cfg, n, *, seed=0, budget=(4, 9)):
     return reqs
 
 
-# memoized spec-off reference runs per (arch, pallas, page, chunk)
+# memoized spec-off reference runs per (arch, pallas, page, chunk, kvq)
 _REF = {}
 
 
-def _reference(arch, policy, page, chunk, reqs, cfg, params):
-    key = (arch, policy.use_pallas, page, chunk)
+def _reference(arch, policy, page, chunk, reqs, cfg, params, kvq=False):
+    key = (arch, policy.use_pallas, page, chunk, kvq)
     if key not in _REF:
         kw = dict(max_slots=2, max_len=MAX_LEN)
         if page is not None:
             kw["page_size"] = page
         if chunk is not None:
             kw["prefill_chunk"] = chunk
+        if kvq:
+            kw["kv_quant"] = KV_PINNED
         eng = PoolEngine(cfg, policy, params, **kw)
         _REF[key] = (eng.run(reqs), eng.last_stats)
     return _REF[key]
 
 
-def _check(arch, drafter, *, page=None, chunk=None, use_pallas=False, n=4):
+def _check(arch, drafter, *, page=None, chunk=None, use_pallas=False, n=4,
+           kvq=False):
     cfg, params = _params_for(arch)
     policy = PALLAS if use_pallas else PAPER_FAITHFUL
     reqs = _requests(cfg, n, seed=len(arch))
-    ref, ref_stats = _reference(arch, policy, page, chunk, reqs, cfg, params)
+    ref, ref_stats = _reference(
+        arch, policy, page, chunk, reqs, cfg, params, kvq
+    )
     kw = dict(max_slots=2, max_len=MAX_LEN, spec=DRAFTERS[drafter])
     if page is not None:
         kw["page_size"] = page
     if chunk is not None:
         kw["prefill_chunk"] = chunk
+    if kvq:
+        kw["kv_quant"] = KV_PINNED
     eng = PoolEngine(cfg, policy, params, **kw)
     out = eng.run(reqs)
     for r in reqs:
         np.testing.assert_array_equal(
             out[r.uid], ref[r.uid],
             err_msg=f"{arch} drafter={drafter} page={page} chunk={chunk} "
-                    f"pallas={use_pallas} uid={r.uid}",
+                    f"pallas={use_pallas} kvq={kvq} uid={r.uid}",
         )
     st = eng.last_stats
     # speculation may only ever SAVE full-policy weight passes; every
@@ -138,6 +152,20 @@ def test_spec_bit_identical_pallas(arch, page_kind, drafter):
     decode, so acceptance stays exact on the kernel path."""
     page = None if page_kind == "span" else _PAGES[arch]
     _check(arch, drafter, page=page, use_pallas=True, n=3)
+
+
+@pytest.mark.parametrize("drafter", sorted(DRAFTERS))
+@pytest.mark.parametrize("page_kind", ["span", "small"])
+@pytest.mark.parametrize("arch", ["llama3-8b", "mistral-nemo-12b@w8"])
+def test_spec_bit_identical_kvq(arch, page_kind, drafter):
+    """Speculation over PoT-quantized KV pages: the draft's quantized
+    writes (codes + betas) are erased by the snapshot restore before
+    verification, the rejected tail's are rolled back after, and per-token
+    betas make the accepted writes byte-equal to what sequential quantized
+    decode would have stored — so spec-on tokens stay byte-identical to
+    the spec-off quantized engine, ring wrap included."""
+    page = None if page_kind == "span" else _PAGES[arch]
+    _check(arch, drafter, page=page, kvq=True, n=3)
 
 
 @pytest.mark.parametrize("drafter", sorted(DRAFTERS))

@@ -54,23 +54,17 @@ def test_pooled_decode_heterogeneous_positions(arch, policy_kind):
     mistral-nemo adds the sliding-window ring cache (span 8 < prompt
     length), so per-slot ring wrap is covered too.
 
-    The comparison is BITWISE at the logits level under BOTH policies.
-    The serving policy (quantized + per-sample scales — what the pool
-    engine actually runs) always was; the FP32 baseline used to hide a
-    ~1e-7 whisper batch-size wobble behind a 2e-4 tolerance (XLA fused
-    the non-enabled ``jnp.dot``/``dot_general`` reductions differently
-    for B=1 vs B=3) until mfmac pinned those paths to
-    ``Precision.HIGHEST`` — fixed-order reductions are batch-shape
-    independent, so raw FP32 now matches exactly too."""
+    The comparison is BITWISE at the logits level under BOTH policies:
+    mfmac's row-wise decode programs make raw FP32 batch-invariant and
+    the serving policy's per-sample scales make the quantized path so."""
     import dataclasses as _dc
 
     from repro.core.policy import PAPER_FAITHFUL
 
     if policy_kind == "fp32":
-        pol, exact = POL, True
+        pol = POL
     else:
         pol = _dc.replace(PAPER_FAITHFUL, per_sample_act_scales=True)
-        exact = True
     cfg = C.smoke_config(arch)
     params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
     from repro.serve import slots as slots_lib
@@ -115,10 +109,7 @@ def test_pooled_decode_heterogeneous_positions(arch, policy_kind):
         for i in range(len(plens)):
             got, want = np.asarray(lg[i]), np.asarray(solo_logits[i][t][0])
             msg = f"{arch} slot {i} pooled step {t}"
-            if exact:
-                np.testing.assert_array_equal(got, want, err_msg=msg)
-            else:
-                np.testing.assert_allclose(got, want, atol=2e-4, err_msg=msg)
+            np.testing.assert_array_equal(got, want, err_msg=msg)
 
 
 def test_sliding_window_ring_cache():

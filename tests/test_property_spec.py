@@ -11,7 +11,11 @@ installed, with the nightly ``REPRO_HYPOTHESIS_SCALE`` multiplier):
   randomized paged and slot-rowed caches, checked against an independent
   numpy model: rejected positions are restored bit-exactly, kept
   positions retain the round's writes, untouched storage never moves,
-  and ``len`` lands at ``len0 + keep``;
+  and ``len`` lands at ``len0 + keep``; the quantized-pool variant runs
+  the same model over the PoT wire leaves (uint8 code pages plus the
+  ``k_beta``/``v_beta`` scale leaves, junk-scribbled with unclamped
+  int32s) — a beta leaf the snapshot missed would silently re-scale
+  restored codes;
 * the whole engine — a *chaos* drafter proposing random-length,
   mostly-garbage drafts drives a real paged ``PoolEngine``; served tokens
   must stay bit-identical to the spec-off engine (acceptance only ever
@@ -28,7 +32,7 @@ import numpy as np
 import pytest
 
 from repro import configs as C
-from repro.core.policy import PAPER_FAITHFUL
+from repro.core.policy import KV_PINNED, PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
 from repro.serve import NgramDrafter, PoolEngine, Request
 from repro.serve.slots import spec_restore, spec_snapshot
@@ -127,10 +131,13 @@ if hypothesis is not None:
 _L, _KV, _HD = 2, 1, 2
 
 
-def _roundtrip(paged, geometry, seed):
+def _roundtrip(paged, geometry, seed, quant=False):
     """Snapshot a random cache, scribble junk on the C touched entries
     (addresses recomputed in pure numpy), restore with random ``keep``,
-    and compare every element of storage against the model."""
+    and compare every element of storage against the model.  ``quant``
+    (paged only) swaps the fp K/V pages for the PoT wire layout: uint8
+    code pages plus per-token ``k_beta``/``v_beta`` int32 scale leaves,
+    which snapshot/restore must roundtrip alongside the codes."""
     rng = np.random.default_rng(seed)
     if paged:
         page, npp, nb = geometry  # page size, pages/slot, slots
@@ -141,13 +148,28 @@ def _roundtrip(paged, geometry, seed):
         table = table.reshape(nb, npp).astype(np.int32)
         if rng.integers(0, 2):  # a rolled-back / dead page -> null row
             table[rng.integers(0, nb), rng.integers(0, npp)] = null
-        k0 = rng.normal(size=(_L, rows, page, _KV, _HD)).astype(np.float32)
+        if quant:
+            k0 = rng.integers(
+                0, 256, (_L, rows, page, _KV, _HD)
+            ).astype(np.uint8)
+        else:
+            k0 = rng.normal(
+                size=(_L, rows, page, _KV, _HD)
+            ).astype(np.float32)
         pos0 = rng.integers(-1, 40, (rows, page)).astype(np.int32)
     else:
+        assert not quant, "only paged pools carry the quantized wire format"
         span, nb = geometry
         k0 = rng.normal(size=(_L, nb, span, _KV, _HD)).astype(np.float32)
         pos0 = rng.integers(-1, 40, (nb, span)).astype(np.int32)
-    v0 = rng.normal(size=k0.shape).astype(np.float32)
+    if quant:
+        v0 = rng.integers(0, 256, k0.shape).astype(np.uint8)
+        # unclamped junk betas on purpose: the decode side is specified to
+        # survive them, so rollback must roundtrip them verbatim too
+        kb0 = rng.integers(-(2**30), 2**30, (_L, rows, page)).astype(np.int32)
+        vb0 = rng.integers(-(2**30), 2**30, (_L, rows, page)).astype(np.int32)
+    else:
+        v0 = rng.normal(size=k0.shape).astype(np.float32)
     c = int(rng.integers(1, min(span, 4) + 1))
     lens = rng.integers(0, 2 * span, (nb,)).astype(np.int32)
     keep = rng.integers(0, c + 1, (nb,)).astype(np.int32)
@@ -158,10 +180,15 @@ def _roundtrip(paged, geometry, seed):
     }
     if paged:
         cache["table"] = jnp.asarray(table)
+    if quant:
+        cache["k_beta"] = jnp.asarray(kb0)
+        cache["v_beta"] = jnp.asarray(vb0)
     snap = jax.jit(spec_snapshot, static_argnums=1)(cache, c)
 
     # the round scribbles junk on every touched entry (numpy addressing)
     kj, vj, pj = k0.copy(), v0.copy(), pos0.copy()
+    if quant:
+        kbj, vbj = kb0.copy(), vb0.copy()
 
     def _addr(b, j):
         g = (int(lens[b]) + j) % span
@@ -169,24 +196,40 @@ def _roundtrip(paged, geometry, seed):
             return int(table[b, g // page]), g % page
         return b, g
 
+    def _junk(shape, proto):
+        if proto.dtype == np.uint8:
+            return rng.integers(0, 256, shape).astype(np.uint8)
+        return rng.normal(size=shape).astype(np.float32)
+
     for b in range(nb):
         for j in range(c):
             r, o = _addr(b, j)
-            kj[:, r, o] = rng.normal(size=(_L, _KV, _HD))
-            vj[:, r, o] = rng.normal(size=(_L, _KV, _HD))
+            kj[:, r, o] = _junk((_L, _KV, _HD), kj)
+            vj[:, r, o] = _junk((_L, _KV, _HD), vj)
             pj[r, o] = int(rng.integers(100, 200))
+            if quant:
+                kbj[:, r, o] = rng.integers(-(2**30), 2**30, (_L,))
+                vbj[:, r, o] = rng.integers(-(2**30), 2**30, (_L,))
     dirty = dict(cache, k=jnp.asarray(kj), v=jnp.asarray(vj),
                  pos=jnp.asarray(pj), len=jnp.asarray(lens + c))
+    if quant:
+        dirty["k_beta"] = jnp.asarray(kbj)
+        dirty["v_beta"] = jnp.asarray(vbj)
     out = jax.jit(spec_restore)(dirty, snap, jnp.asarray(keep))
 
     # model: start from the junked state, restore the rejected tail
     ek, ev, ep = kj.copy(), vj.copy(), pj.copy()
+    if quant:
+        ekb, evb = kbj.copy(), vbj.copy()
     for b in range(nb):
         for j in range(int(keep[b]), c):
             r, o = _addr(b, j)
             ek[:, r, o] = k0[:, r, o]
             ev[:, r, o] = v0[:, r, o]
             ep[r, o] = pos0[r, o]
+            if quant:
+                ekb[:, r, o] = kb0[:, r, o]
+                evb[:, r, o] = vb0[:, r, o]
     if paged:  # the null row absorbs dead-slot traffic: exclude it
         live = np.arange(rows) != null
         sl_k = (slice(None), live)
@@ -199,6 +242,13 @@ def _roundtrip(paged, geometry, seed):
     np.testing.assert_array_equal(np.asarray(out["len"]), lens + keep)
     if paged:
         np.testing.assert_array_equal(np.asarray(out["table"]), table)
+    if quant:
+        np.testing.assert_array_equal(
+            np.asarray(out["k_beta"])[sl_k], ekb[sl_k]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["v_beta"])[sl_k], evb[sl_k]
+        )
 
 
 PAGED_GEOMETRIES = [(2, 2, 2), (1, 3, 1), (3, 2, 3), (4, 1, 2)]
@@ -217,6 +267,12 @@ def test_rollback_roundtrip_rowed_fixed(geometry, seed):
     _roundtrip(False, geometry, seed)
 
 
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("geometry", PAGED_GEOMETRIES)
+def test_rollback_roundtrip_quantized_fixed(geometry, seed):
+    _roundtrip(True, geometry, seed, quant=True)
+
+
 if hypothesis is not None:
 
     @hypothesis.given(
@@ -227,6 +283,15 @@ if hypothesis is not None:
     @hypothesis.settings(deadline=None, max_examples=40 * _SCALE)
     def test_rollback_roundtrip_paged(geometry, seed):
         _roundtrip(True, geometry, seed)
+
+    @hypothesis.given(
+        geometry=st.tuples(st.integers(1, 4), st.integers(1, 3),
+                           st.integers(1, 3)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=40 * _SCALE)
+    def test_rollback_roundtrip_quantized(geometry, seed):
+        _roundtrip(True, geometry, seed, quant=True)
 
     @hypothesis.given(
         geometry=st.tuples(st.integers(1, 8), st.integers(1, 3)),
@@ -280,7 +345,7 @@ def _ctx():
     return _CTX["cfg"], _CTX["params"]
 
 
-def _drive_engine(seed, page):
+def _drive_engine(seed, page, kvq=False):
     cfg, params = _ctx()
     rng = np.random.default_rng(seed)
     reqs = []
@@ -295,6 +360,8 @@ def _drive_engine(seed, page):
     kw = dict(max_slots=2, max_len=_MAX_LEN)
     if page is not None:
         kw["page_size"] = page
+    if kvq:
+        kw["kv_quant"] = KV_PINNED
     base = PoolEngine(cfg, PAPER_FAITHFUL, params, **kw)
     ref = base.run(reqs)
     eng = PoolEngine(cfg, PAPER_FAITHFUL, params,
@@ -303,7 +370,7 @@ def _drive_engine(seed, page):
     for r in reqs:
         np.testing.assert_array_equal(
             out[r.uid], ref[r.uid],
-            err_msg=f"seed={seed} page={page} uid={r.uid}",
+            err_msg=f"seed={seed} page={page} kvq={kvq} uid={r.uid}",
         )
     st_, ref_ = eng.last_stats, base.last_stats
     assert st_.emitted_tokens == ref_.emitted_tokens
@@ -317,12 +384,21 @@ def test_engine_chaos_drafts_fixed(seed, page):
     _drive_engine(seed, page)
 
 
+@pytest.mark.parametrize("seed,page", [(3, None), (4, 4)])
+def test_engine_chaos_drafts_kvq_fixed(seed, page):
+    """Chaos drafts against a PoT-quantized pool: rejected quantized
+    writes (codes AND betas) roll back cleanly, so spec-on stays
+    byte-identical to the spec-off quantized engine."""
+    _drive_engine(seed, page, kvq=True)
+
+
 if hypothesis is not None:
 
     @hypothesis.given(
         seed=st.integers(0, 2**31 - 1),
         page=st.sampled_from([None, 4, 5, 10]),
+        kvq=st.booleans(),
     )
     @hypothesis.settings(deadline=None, max_examples=5 * _SCALE)
-    def test_engine_chaos_drafts(seed, page):
-        _drive_engine(seed, page)
+    def test_engine_chaos_drafts(seed, page, kvq):
+        _drive_engine(seed, page, kvq)
