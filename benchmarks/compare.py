@@ -21,12 +21,16 @@ servebench (exactly reproducible for the fixed smoke trace):
   - weight passes and tokens-per-weight-pass of the speculative engines
     (``spec_on`` / ``spec_on_prefix`` — low-bit self-draft riding the
     paged chunked engine on both traces)
+  - the sharded pool's weight-pass clock, global and per-device
+    (``pool_sharded`` — the plan-carrying engine on the serving mesh,
+    docs/DESIGN_scaling.md)
   It also re-asserts the cross-engine invariants (pool < lockstep steps;
   chunked < solo-prefill passes and TTFT; small pages < page=span KV
   bytes/token; PoT-quantized pages <= half of raw paged bytes/token;
   prefix sharing < unshared passes and TTFT; speculation < spec-off
-  passes with >1 token per pass on both traces), so a regression can't
-  slip in by moving baseline and current together.
+  passes with >1 token per pass on both traces; pool_sharded's pass
+  clock == pool_paged's), so a regression can't slip in by moving
+  baseline and current together.
 
 kernelbench (dimensionless, machine-normalized):
   - ``speedup_x`` of the ``potq_grad_fused_*`` rows (fused-vs-composed
@@ -68,6 +72,9 @@ SERVE_COUNTERS = [
     ("pool_kvq.weight_passes", True),
     ("pool_kvq.mean_ttft_passes", True),
     ("pool_kvq.kv_hbm_bytes_per_token", True),
+    ("pool_sharded.weight_passes", True),
+    ("pool_sharded.mean_ttft_passes", True),
+    ("pool_sharded.per_device_weight_passes", True),
     ("lockstep.decode_steps", True),
     ("prefix_on.weight_passes", True),
     ("prefix_on.mean_ttft_passes", True),
@@ -87,6 +94,7 @@ SERVE_WALLCLOCK = [
     "pool_chunked.tokens_per_s",
     "pool_paged.tokens_per_s",
     "pool_kvq.tokens_per_s",
+    "pool_sharded.tokens_per_s",
     "lockstep.tokens_per_s",
     "speedup_tokens_per_s",
 ]
@@ -146,6 +154,13 @@ def compare_servebench(base, cur, tol):
         failures.append(
             "servebench: PoT-quantized pages no longer halve the live KV "
             "HBM footprint per token vs raw paged"
+        )
+    if (_get(cur, "pool_sharded.weight_passes")
+            != _get(cur, "pool_paged.weight_passes")):
+        failures.append(
+            "servebench: pool_sharded's weight-pass clock diverged from "
+            "pool_paged's — sharding must be cost-transparent on the "
+            "deterministic counters"
         )
     if (_get(cur, "prefix_on.weight_passes")
             >= _get(cur, "prefix_off.weight_passes")):

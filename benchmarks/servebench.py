@@ -24,6 +24,14 @@ through four engines:
   invariance, end to end on the real trace), and its live KV HBM bytes
   per emitted token must be at most HALF of ``pool_paged``'s (the wire
   format's reason to exist).
+* ``pool_sharded`` — the paged chunked engine carrying a sharded pool
+  plan (``parallel.planner.plan_for(..., pool_slots=...)`` on the
+  serving mesh, docs/DESIGN_scaling.md): slots, page tables and page
+  stores sharded over the 'data' axis, weights over 'model', admission
+  double-buffered against the in-flight step.  Gated byte-identical to
+  ``pool_paged`` with an unchanged ``weight_passes`` clock, and reports
+  ``per_device_weight_passes`` (global passes / model-axis width — each
+  model shard streams only its slice of the weights per pass).
 * ``lockstep`` — serve.lockstep_generate in waves of ``--slots`` requests:
   a wave prefills together once its last member has arrived and decodes
   to the wave's **max** output length — dead slots keep streaming every
@@ -90,6 +98,7 @@ import jax.numpy as jnp
 from repro import configs as C
 from repro.core.policy import KV_PINNED, PAPER_FAITHFUL
 from repro.models import registry, spec as pspec
+from repro.parallel import meshes, planner
 from repro.serve import (
     LowBitSelfDraft, PoolEngine, lockstep_generate, poisson_trace,
     shared_prefix_trace,
@@ -97,11 +106,13 @@ from repro.serve import (
 
 
 def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
-             page_size=None, prefix_cache=False, spec=None, kv_quant=None):
+             page_size=None, prefix_cache=False, spec=None, kv_quant=None,
+             plan=None):
     eng = PoolEngine(
         cfg, PAPER_FAITHFUL, params, max_slots=slots, max_len=max_len,
         prefill_chunk=prefill_chunk, page_size=page_size,
         prefix_cache=prefix_cache, spec=spec, kv_quant=kv_quant,
+        plan=plan,
     )
     eng.run(reqs[:1])  # warmup: compile prefill + decode/chunk step
     t0 = time.perf_counter()
@@ -120,6 +131,15 @@ def run_pool(cfg, params, reqs, *, slots, max_len, prefill_chunk=None,
         "ttft_passes": {str(k): v for k, v in sorted(st.ttft_passes.items())},
         "mean_occupancy": st.mean_occupancy,
     }
+    if plan is not None:
+        # sharded-pool accounting (docs/DESIGN_scaling.md): weight_passes
+        # is the global clock; per-device divides by the model-axis width
+        # (each model shard streams only its weight slice per pass)
+        row.update({
+            "data_shards": st.data_shards,
+            "model_shards": st.model_shards,
+            "per_device_weight_passes": st.per_device_weight_passes,
+        })
     if spec is not None:
         # speculative-decoding economics: tokens emitted per full-policy
         # weight pass is THE headline number — >1.0 means speculation
@@ -245,6 +265,25 @@ def main(argv=None):
         cfg, params, reqs, slots=args.slots, max_len=args.max_len,
         prefill_chunk=chunk, page_size=args.page_size, kv_quant=KV_PINNED,
     )
+    # the sharded pool: same trace, same page geometry, but the engine
+    # carries a planner.plan_for pool plan on the serving mesh — slots,
+    # page tables and page stores over 'data', weights over 'model'.  On
+    # the 1-device CI runner every rule degrades to replication, but the
+    # full plan-carrying jit path (in/out shardings, donated sharded
+    # cache, double-buffered admission) is the code under test; the gate
+    # below pins its output byte-identical to pool_paged.
+    mesh = meshes.make_serving_mesh()
+    shape = C.ShapeConfig("serve", args.max_len, args.slots, "decode")
+    span = registry.pool_span(cfg, args.max_len)
+    plan = planner.plan_for(
+        cfg, mesh, shape=shape, pool_slots=args.slots,
+        page_size=args.page_size,
+        num_pages=args.slots * (span // args.page_size),
+    )
+    sharded, sharded_out = run_pool(
+        cfg, params, reqs, slots=args.slots, max_len=args.max_len,
+        prefill_chunk=chunk, page_size=args.page_size, plan=plan,
+    )
     # the pinned-recipe reference: a ONE-slot quantized engine at the
     # default page=span geometry, one request at a time — no batching, no
     # paging.  Same chunked-prefill recipe as the pooled engine (chunked
@@ -309,10 +348,12 @@ def main(argv=None):
             "arrival_lam": args.arrival_lam, "seed": args.seed,
         },
         "kv_quant": {"bits": KV_PINNED.bits, "pack": KV_PINNED.pack},
+        "mesh": plan.mesh_shape(),
         "pool": pool,
         "pool_chunked": chunked,
         "pool_paged": paged,
         "pool_kvq": kvq,
+        "pool_sharded": sharded,
         "lockstep": lock,
         "prefix_off": prefix_off,
         "prefix_on": prefix_on,
@@ -331,6 +372,7 @@ def main(argv=None):
     print(hdr)
     for name, row in (("pool", pool), ("pool_chunked", chunked),
                       ("pool_paged", paged), ("pool_kvq", kvq),
+                      ("pool_sharded", sharded),
                       ("lockstep", lock),
                       ("prefix_off", prefix_off), ("prefix_on", prefix_on),
                       ("spec_on", spec_on),
@@ -381,6 +423,18 @@ def main(argv=None):
                 f"KV bytes/token vs page=span's "
                 f"{chunked['kv_hbm_bytes_per_token']:.1f} — page-granular "
                 "freeing bought nothing"
+            )
+        if sharded_out != paged_out:
+            raise SystemExit(
+                "pool_sharded emitted different tokens than pool_paged — "
+                "the sharded pool plan broke serving bit-identity "
+                "(docs/DESIGN_scaling.md)"
+            )
+        if sharded["weight_passes"] != paged["weight_passes"]:
+            raise SystemExit(
+                f"pool_sharded took {sharded['weight_passes']} weight "
+                f"passes vs pool_paged's {paged['weight_passes']} — "
+                "sharding must not move the deterministic cost clock"
             )
         if kvq_out != solo_kvq_out:
             raise SystemExit(

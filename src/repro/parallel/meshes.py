@@ -144,3 +144,25 @@ def make_host_mesh() -> Mesh:
     """Degenerate 1-host mesh for CPU tests (all rules -> replicate)."""
     n = len(jax.devices())
     return make_mesh((1, n), ("data", "model"))
+
+
+def make_serving_mesh(*, data: Optional[int] = None, model: int = 1) -> Mesh:
+    """``(data, model)`` mesh over this process's visible devices for the
+    sharded serving pool (docs/DESIGN_scaling.md): slots/pages shard over
+    'data', weights over 'model'.  ``data`` defaults to every device not
+    claimed by ``model`` — on a 1-device CPU it degrades to ``(1, 1)``
+    (all rules -> replicate), while under the multi-process smoke path
+    (``repro.parallel.smoke``, run with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) the same call
+    yields a real N-way data axis, so the identical engine code exercises
+    genuinely sharded slots on stock CPU runners."""
+    n = len(jax.devices())
+    if model < 1 or n % model:
+        raise ValueError(f"model={model} must divide the {n} visible devices")
+    if data is None:
+        data = n // model
+    if data * model > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices, have {n}"
+        )
+    return make_mesh((data, model), ("data", "model"))

@@ -151,9 +151,20 @@ class ShardingPlan:
     # code pages + k_beta/v_beta scale leaves), so an engine whose
     # kv_quant disagrees must refuse the plan.
     kv_bits: Optional[int] = None
+    # Mesh-shape keys (docs/DESIGN_scaling.md): plans are keyed by the
+    # mesh they were built on exactly like by page geometry — a pool
+    # plan's sharded-cache specs (slots and page stores over the data
+    # axes, weights over 'model') and its rounded ``num_pages`` are only
+    # meaningful on a mesh of this shape.  ``data_shards`` is the total
+    # data-parallel factor (pod x data); ``model_shards`` the tensor-
+    # parallel factor; both 1 on the host mesh.  The engine copies them
+    # into ServeStats so servebench can report per-device weight passes.
+    data_shards: int = 1
+    model_shards: int = 1
 
     # -- shardings ---------------------------------------------------------
     def named(self, spec: P) -> NamedSharding:
+        """Bind a ``PartitionSpec`` to this plan's mesh."""
         return NamedSharding(self.mesh, spec)
 
     def _tree_named(self, tree):
@@ -162,13 +173,20 @@ class ShardingPlan:
         )
 
     def param_shardings(self):
+        """``NamedSharding`` tree mirroring the param spec tree — what
+        jit's ``in_shardings`` wants for the params argument."""
         return self._tree_named(self.params)
 
     def data_shardings(self):
+        """``NamedSharding`` tree for the batch dict (requires the plan
+        to have been built with a ``ShapeConfig``)."""
         assert self.data is not None, "plan built without a shape"
         return self._tree_named(self.data)
 
     def cache_shardings(self):
+        """``NamedSharding`` tree for the KV/recurrent cache (requires a
+        prefill/decode ``ShapeConfig``; the pooled layout when the plan
+        was built with ``pool_slots``)."""
         assert self.cache is not None, "plan built without a prefill/decode shape"
         return self._tree_named(self.cache)
 
@@ -199,11 +217,23 @@ class ShardingPlan:
         return self.activation_pspec(2, batch_size=batch_size)
 
     def replicated(self) -> NamedSharding:
+        """Fully-replicated sharding on this plan's mesh (scalars,
+        host-computed int32 vectors, anything too small to split)."""
         return self.named(P())
 
     def fsdp_size(self) -> int:
         """Total size of the data-parallel/FSDP axes of the plan's mesh."""
         return shd._axis_size(self.mesh, shd.fsdp_axes(self.mesh))
+
+    def model_size(self) -> int:
+        """Size of the tensor-parallel 'model' axis (1 when absent)."""
+        ma = shd.model_axis(self.mesh)
+        return shd._axis_size(self.mesh, (ma,) if ma else None)
+
+    def mesh_shape(self) -> dict:
+        """``{axis_name: size}`` of the mesh this plan was built on — the
+        shape that keys the plan (with page geometry and ``kv_bits``)."""
+        return meshes.shape_dict(self.mesh)
 
     def abstract_params(self):
         """ShapeDtypeStruct tree of the planned params (for .lower())."""
@@ -214,12 +244,17 @@ class ShardingPlan:
 
     # -- introspection -----------------------------------------------------
     def validate(self) -> "ShardingPlan":
+        """Re-check every leaf/dim decision against the mesh (run on
+        build by default); raises ``ShardingPlanError`` naming the leaf
+        path and dimension on the first violation.  Returns self."""
         mesh_shape = meshes.shape_dict(self.mesh)
         for rep in self.report:
             _validate_leaf(rep, mesh_shape)
         return self
 
     def summary(self) -> str:
+        """Human-readable dump: every planned leaf's shape -> spec plus
+        the per-tensor MoE EP/TP decisions."""
         mesh_shape = meshes.shape_dict(self.mesh)
         lines = [f"ShardingPlan on mesh {mesh_shape}:"]
         for rep in self.report:
@@ -271,8 +306,21 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
 
     ``kv_quant`` (a ``core.policy.KVQuantSpec``) keys a pool plan by the
     quantized-KV wire format the same way: code-page leaves + per-token
-    ``k_beta``/``v_beta`` scale leaves (replicated per the ``cache_pspecs``
-    name rules — they are tiny int32), recorded as ``plan.kv_bits``.
+    ``k_beta``/``v_beta`` scale leaves, recorded as ``plan.kv_bits``.
+
+    Pool plans are additionally **sharded-pool** plans
+    (docs/DESIGN_scaling.md): slots, page tables, page stores and beta
+    leaves shard over the data axes, weights over 'model'
+    (``sharding.cache_pspecs(pool=True)``), each dim falling back to
+    replication when it doesn't divide.  The mesh shape keys the plan
+    exactly like page geometry does — it is recorded as
+    ``plan.data_shards`` / ``plan.model_shards`` — and when the physical
+    page count is defaulted it is rounded UP so the page-store axis
+    (``num_pages + 1``, including the null page) divides the data axes:
+    the extra pages are spare allocator capacity, never a semantics
+    change.  Engines must therefore build with
+    ``num_pages=plan.num_pages``; :class:`PoolEngine` refuses a geometry
+    mismatch up front.
     """
     # local imports: keep repro.parallel importable without the model zoo
     from repro.data import pipeline
@@ -316,6 +364,14 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
                     page_size = page_size or span
                     if num_pages is None:
                         num_pages = pool_slots * (span // page_size)
+                        # sharded pool: round the physical page count up
+                        # so the page-store axis (num_pages + 1 with the
+                        # null page) divides the data axes — spare pages
+                        # are extra allocator capacity, not a semantics
+                        # change.  Explicit num_pages is honoured as-is.
+                        dsz = shd._axis_size(mesh, shd.fsdp_axes(mesh))
+                        if dsz > 1 and (num_pages + 1) % dsz:
+                            num_pages += dsz - (num_pages + 1) % dsz
                 abstract_cache = jax.eval_shape(
                     lambda: registry.init_pool_cache(
                         cfg, pool_slots, shape.seq_len,
@@ -329,7 +385,9 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
                         cfg, shape.global_batch, shape.seq_len
                     )
                 )
-            cache = shd.cache_pspecs(mesh, abstract_cache)
+            cache = shd.cache_pspecs(
+                mesh, abstract_cache, pool=pool_slots is not None
+            )
             flat_c = jax.tree_util.tree_leaves_with_path(abstract_cache)
             flat_cp = jax.tree_util.tree_leaves(
                 cache, is_leaf=lambda x: isinstance(x, P)
@@ -339,12 +397,15 @@ def plan_for(cfg, mesh, shape=None, *, validate: bool = True,
                     _analyze_leaf("cache", _path_str(path), leaf.shape, p)
                 )
 
+    ma = shd.model_axis(mesh)
     plan = ShardingPlan(
         mesh=mesh, params=params, data=data, cache=cache,
         moe=moe, report=tuple(report), shape=shape,
         cache_abstract=abstract_cache, specs=specs, pool_slots=pool_slots,
         page_size=page_size, num_pages=num_pages,
         kv_bits=kv_quant.bits if kv_quant is not None else None,
+        data_shards=shd._axis_size(mesh, shd.fsdp_axes(mesh)),
+        model_shards=shd._axis_size(mesh, (ma,) if ma else None),
     )
     if validate:
         plan.validate()

@@ -166,7 +166,7 @@ def data_pspecs(mesh: Mesh, batch_shapes):
     return out
 
 
-def cache_pspecs(mesh: Mesh, cache_tree):
+def cache_pspecs(mesh: Mesh, cache_tree, *, pool: bool = False):
     """Shardings for a decode cache pytree (of arrays or SDS).
 
     Rules are keyed on the cache-leaf name (registry.init_cache layouts):
@@ -178,12 +178,24 @@ def cache_pspecs(mesh: Mesh, cache_tree):
     Ragged dims (whisper's 1500-frame cross cache, batch=1 long-context)
     fall back to replication per-dim.
 
-    Paged pool caches (serve/slots.py) reuse the same name rules: k/v
-    become (L, num_pages+1, page, KV, hd), so the 5-D rule lands fsdp on
-    the physical-page dim (replication fallback when num_pages+1 doesn't
-    divide) and model on the in-page position dim; ``pos`` (2-D) and the
-    int32 ``table`` fall through to replicated — they are tiny and every
-    device needs them for the gather.
+    ``pool=True`` (the planner sets it for ``pool_slots`` plans) adds the
+    sharded-pool rules over the slot-pooled layouts of serve/slots.py
+    (docs/DESIGN_scaling.md):
+
+      k/v        (L, num_pages+1, page, KV, hd): physical pages -> fsdp
+                 (the 5-D rule above already lands there), in-page
+                 position -> model;
+      k_beta/    (L, num_pages+1, page) quantized per-token scales:
+      v_beta     physical pages -> fsdp, so a page's scales shard with
+                 the code page they describe;
+      len        (slots,) and ``table`` (slots, pages_per_slot): slot
+                 axis -> fsdp — slots ARE the data-parallel batch;
+      pos        (num_pages+1, page): replicated — it is the gather/mask
+                 index metadata every shard consults, a few KiB of int32.
+
+    Each rule still falls back to replication per-dim when the size does
+    not divide (e.g. 8 slots on a 16-wide data axis), so the same plan
+    call degrades cleanly on the 1-device host mesh.
     """
     fa = fsdp_axes(mesh)
     ma = model_axis(mesh)
@@ -194,6 +206,8 @@ def cache_pspecs(mesh: Mesh, cache_tree):
             a = _maybe(shape[dim], mesh, axes)
             if a:
                 out[dim] = a if len(a) > 1 else a[0]
+        while out and out[-1] is None:  # canonical: trailing None == P()
+            out.pop()
         return P(*out)
 
     def one(path, x):
@@ -205,6 +219,13 @@ def cache_pspecs(mesh: Mesh, cache_tree):
         shape = x.shape
         nd = len(shape)
         mt = (ma,) if ma else ()
+        if pool:
+            if name == "len" and nd == 1:
+                return assign(shape, [(0, fa)])
+            if name == "table" and nd == 2:
+                return assign(shape, [(0, fa)])
+            if name in ("k_beta", "v_beta") and nd == 3:
+                return assign(shape, [(1, fa)])
         if name in ("k", "v", "ck", "cv"):
             if nd == 5:
                 return assign(shape, [(1, fa), (2, mt)])

@@ -32,7 +32,14 @@ Sharded serving consumes a validated
 :class:`repro.parallel.planner.ShardingPlan` built with ``pool_slots``
 (so its cache specs cover the lifted per-slot ``pos``/``len`` leaves):
 pass ``plan=`` to the step factories or engines; with ``plan=None`` (CPU
-tests, single device) everything runs unsharded.
+tests, single device) everything runs unsharded.  Pool plans shard the
+pool itself — slots, page tables, page stores and beta leaves over the
+data axes, weights over 'model' (docs/DESIGN_scaling.md) — and the
+engine's admission pipeline is double-buffered so host-side scheduling
+and prefill-chunk staging overlap the in-flight jitted step (see
+:meth:`PoolEngine.run`); because the staged rows are byte-identical to
+what the synchronous loop would build, sharding and overlap never change
+a request's tokens (tests/conformance/test_serve_sharded.py).
 """
 from __future__ import annotations
 
@@ -265,6 +272,12 @@ def _shared_step(kind: str, cfg, policy, body):
 
 def make_prefill_step(cfg: ModelConfig, policy: QuantPolicy,
                       plan: Optional[ShardingPlan] = None):
+    """The batched prefill step (``registry.prefill``): consumes a batch
+    dict, returns (last-position logits, filled cache).  Plan-less calls
+    share one jitted closure per (cfg, policy) under the ambient-plan
+    contract of ``_shared_step``; with a ``plan`` the step is jitted
+    against the plan's param/data/cache shardings (cache donated), so the
+    compiled step IS the sharded program — no per-call re-derivation."""
     prefill_step = _prefill_fn(cfg, policy)
     if plan is None:
         return _shared_step("prefill", cfg, policy, prefill_step)
@@ -412,19 +425,39 @@ class ServeStats:
     pages_in_use_sum: int = 0  # sum over decode steps of live pages
     page_size: int = 0
     kv_page_bytes: int = 0  # HBM bytes of one K+V page across all layers
+    # sharded serving (docs/DESIGN_scaling.md): the mesh-shape keys of the
+    # engine's plan — data_shards slots-per-device divisor, model_shards
+    # weight-shard divisor; both 1 for plan-less / host-mesh engines
+    data_shards: int = 1
+    model_shards: int = 1
 
     @property
     def mean_occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per pooled step."""
         return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
 
     @property
+    def per_device_weight_passes(self) -> float:
+        """Full-weight-equivalent streams per device: with weights sharded
+        ``model_shards``-way, each SPMD dispatch streams 1/model_shards of
+        the weight bytes per device, so the per-device cost clock is
+        ``weight_passes / model_shards`` — the tensor-parallel payoff the
+        sharded pool exists for (data_shards divides the KV traffic, not
+        the weight traffic).  Deterministic like ``weight_passes``, so
+        benchmarks/compare.py gates on it directly."""
+        return self.weight_passes / max(1, self.model_shards)
+
+    @property
     def mean_ttft_passes(self) -> float:
+        """Mean per-request time-to-first-token on the weight-pass clock
+        (queue wait included) — the deterministic admission-latency gate."""
         if not self.ttft_passes:
             return 0.0
         return sum(self.ttft_passes.values()) / len(self.ttft_passes)
 
     @property
     def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from shared prefix pages."""
         if not self.prompt_tokens:
             return 0.0
         return self.prefix_hit_tokens / self.prompt_tokens
@@ -447,6 +480,32 @@ class ServeStats:
         if not self.emitted_tokens:
             return 0.0
         return self.pages_in_use_sum * self.kv_page_bytes / self.emitted_tokens
+
+
+class _InflightTokens:
+    """Handle to the token vector of a dispatched pooled step.
+
+    JAX dispatch is asynchronous — the jitted step returns device buffers
+    immediately while the computation runs; ``copy_to_host_async`` then
+    starts the device->host transfer of the (max_slots,) token vector in
+    the background too.  The engine's double-buffered admission work
+    (arrival stamping, next-step prefill-chunk staging — see
+    :meth:`PoolEngine.run`) happens between dispatch and :meth:`wait`, so
+    host-side scheduling overlaps both the step and the copy.  ``wait()``
+    is the ONE synchronization point per engine step; retirement, EOS
+    cuts and the admissions they unblock all run as the continuation of
+    the arrived copy (host-callback retirement)."""
+
+    def __init__(self, tok):
+        self._tok = tok
+        try:
+            tok.copy_to_host_async()
+        except AttributeError:  # non-jax stand-ins in unit tests
+            pass
+
+    def wait(self) -> np.ndarray:
+        """Block until the copy lands; returns the host token vector."""
+        return np.asarray(self._tok)
 
 
 class PoolEngine:
@@ -807,12 +866,28 @@ class PoolEngine:
         generated token ids}.  Host-side loop; the pooled step (plain
         decode, or the fused decode+prefill-chunk step under
         ``prefill_chunk``) is a single fixed-shape jitted dispatch per
-        step."""
+        step.
+
+        Admission is **double-buffered** against the in-flight step
+        (docs/DESIGN_scaling.md): dispatch is async, the token vector's
+        device->host copy is started immediately (:class:`_InflightTokens`)
+        and, while both run, the host stamps the next step's arrivals and
+        stages the next prefill-chunk row of every slot that stays
+        PREFILLING — work that provably cannot depend on the in-flight
+        tokens.  ``wait()`` is the one sync point per step; retirements,
+        EOS cuts, and the admissions they unblock execute as the copy's
+        continuation and patch the staged buffer (decode rows, fresh
+        admissions) before the next dispatch.  The staged rows are
+        byte-identical to the rows the synchronous loop would build, so
+        overlap changes wall-clock only — never tokens or counters."""
         self._validate(requests)
         sched = FIFOScheduler(self.max_slots)
         for r in requests:
             sched.submit(r)
         stats = ServeStats()
+        if self.plan is not None:
+            stats.data_shards = self.plan.fsdp_size()
+            stats.model_shards = self.plan.model_size()
         alloc = None
         if self.paged:
             alloc = slots_lib.PageAllocator(
@@ -845,11 +920,15 @@ class PoolEngine:
         arrival_pass: Dict = {}  # uid -> weight_passes when first admissible
         last_tok = np.zeros((self.max_slots,), np.int32)
         chunk = self.prefill_chunk
+        # double-buffered admission: the (row, take, finishes) chunk rows
+        # pre-staged for the NEXT step while the current one is in flight
+        staged: Dict[int, tuple] = {}
         step = 0
 
-        def stamp_arrivals():
+        def stamp_arrivals(now=None):
+            now = step if now is None else now
             for arr, uid in sched.pending_arrivals():
-                if arr <= step and uid not in arrival_pass:
+                if arr <= now and uid not in arrival_pass:
                     arrival_pass[uid] = stats.weight_passes
 
         holds: List = []  # reserve() results, FIFO with sched.admit's pairs
@@ -1128,6 +1207,15 @@ class PoolEngine:
                         tokens[slot, 0] = last_tok[slot]
                         n_new[slot] = 1
                     for slot in prefilling:
+                        if slot in staged:
+                            # double-buffered: this row was staged while
+                            # the previous step was in flight
+                            row, take, fin = staged.pop(slot)
+                            tokens[slot] = row
+                            n_new[slot] = take
+                            if fin:
+                                finishing.append(slot)
+                            continue
                         buf = pending[slot]
                         take = min(chunk, len(buf))
                         tokens[slot, :take] = buf[:take]
@@ -1139,7 +1227,9 @@ class PoolEngine:
                         self.params, jnp.asarray(tokens),
                         jnp.asarray(n_new), cache,
                     )
-                ntok_host = np.asarray(ntok)
+                # -- overlap window: the jitted step (and the async host
+                # copy of its token vector) is in flight ------------------
+                flight = _InflightTokens(ntok)
                 stats.decode_steps += 1
                 stats.weight_passes += 1
                 stats.occupancy_sum += (
@@ -1147,6 +1237,29 @@ class PoolEngine:
                 )
                 if alloc is not None:
                     stats.pages_in_use_sum += alloc.pages_in_use()
+                # host-side scheduling overlaps the step: next-step arrivals
+                # stamp against the already-bumped pass clock (identical to
+                # stamping at the top of the next iteration — no weight pass
+                # can land in between), and every slot that STAYS prefilling
+                # gets its next chunk row staged now.  Neither depends on
+                # this step's tokens: finishing slots are known at dispatch
+                # (their whole prompt is consumed) and prefilling slots are
+                # never retired, so the staging buffer can't be invalidated
+                # by the retirements the arriving tokens trigger.
+                stamp_arrivals(step + 1)
+                if chunk is not None:
+                    for slot in prefilling:
+                        if slot in finishing:
+                            continue  # next row needs this step's token
+                        buf = pending[slot]
+                        take = min(chunk, len(buf))
+                        row = np.zeros((chunk,), np.int32)
+                        row[:take] = buf[:take]
+                        staged[slot] = (row, take, take == len(buf))
+                        pending[slot] = buf[take:]
+                # -- synchronize: tokens arrive; retirement and the
+                # admissions it unblocks run as the copy's continuation --
+                ntok_host = flight.wait()
                 for slot in finishing:
                     sched.finish_prefill(slot)
                     stats.prefills += 1

@@ -1,0 +1,221 @@
+"""Sharded-serving conformance: the data-axis split never changes tokens.
+
+The scaling layer (docs/DESIGN_scaling.md) extends the serving
+bit-identity chain one more axis: a :class:`PoolEngine` carrying a
+sharded pool plan (``planner.plan_for(..., pool_slots=...)`` — slots,
+page tables, page stores and beta leaves over the data axes, weights
+over 'model') must serve **byte-identical** tokens to the plan-less
+single-device pool, which is itself already pinned bit-identical to solo
+decode (tests/conformance/test_serve_batching.py).  The reasons stack:
+
+* every per-row computation is batch-invariant (per-sample scales,
+  row-independent matmul reductions), so splitting the slot axis across
+  devices only changes WHERE a row computes, never what it computes;
+* attention gathers K/V through the page table in logical page order, so
+  scattering physical pages across shards cannot reach the numbers;
+* weight shards reduce with the same fixed-order canonical-chunk scheme
+  (ACC_SCHEME) on every device.
+
+Matrix: {llama3, whisper} x {jnp, pallas} x >=2 arrival schedules, all
+on the 1-device serving mesh (rules degrade to replication but the full
+plan-carrying jit path — in/out shardings, donated sharded cache,
+ambient-plan contract — is exercised end to end), plus the carry-over
+pin that the decode fast-path's two step bodies stay bit-equal *in the
+sharded path*, and a ``multiprocess`` smoke that reruns the engine over
+a real 2-way data axis via ``XLA_FLAGS=--xla_force_host_platform_
+device_count`` (repro.parallel.smoke).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.policy import PAPER_FAITHFUL
+from repro.models import registry, spec as pspec
+from repro.parallel import actshard, meshes, planner
+from repro.serve import PoolEngine, Request
+from repro.serve import engine as engine_mod
+
+MAX_LEN = 24
+CHUNK = 4
+SLOTS = 2
+PALLAS = dataclasses.replace(PAPER_FAITHFUL, use_pallas=True)
+
+SCHEDULES = {
+    "all_at_once": lambda n: [0] * n,
+    "staggered": lambda n: [2 * i for i in range(n)],
+}
+
+
+def _params_for(arch):
+    cfg = C.smoke_config(arch)
+    params = pspec.materialize(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, arrivals, *, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 9))
+        toks = rng.integers(0, cfg.vocab, (1, plen)).astype(np.int32)
+        extras = {}
+        if cfg.family == "encdec":
+            extras["frames"] = np.asarray(
+                jax.random.normal(
+                    jax.random.PRNGKey(1000 + i),
+                    (1, cfg.enc_seq, cfg.frame_dim),
+                ),
+                np.float32,
+            )
+        reqs.append(
+            Request(
+                uid=i, tokens=toks, max_new_tokens=int(rng.integers(2, 6)),
+                arrival=arrivals[i], extras=extras,
+            )
+        )
+    return reqs
+
+
+# memoized per (arch, pallas): config + params + plan + both engines, so
+# the jitted steps are reused across the schedule axis of the matrix
+_CACHE = {}
+
+
+def _setup(arch, use_pallas):
+    key = (arch, use_pallas)
+    if key not in _CACHE:
+        cfg, params = _params_for(arch)
+        policy = PALLAS if use_pallas else PAPER_FAITHFUL
+        mesh = meshes.make_serving_mesh()
+        shape = C.ShapeConfig("serve", MAX_LEN, SLOTS, "decode")
+        plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=SLOTS)
+        kw = dict(
+            max_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+            page_size=plan.page_size, num_pages=plan.num_pages,
+        )
+        sharded = PoolEngine(cfg, policy, params, plan=plan, **kw)
+        baseline = PoolEngine(cfg, policy, params, **kw)
+        _CACHE[key] = (cfg, plan, sharded, baseline)
+    return _CACHE[key]
+
+
+@pytest.mark.parametrize("schedule", sorted(SCHEDULES))
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("arch", ["llama3-8b", "whisper-large-v3"])
+def test_sharded_pool_matches_single_device_pool(arch, use_pallas, schedule):
+    """Headline scaling invariant: plan-carrying pool == plan-less pool,
+    byte for byte, per request — so sharding composes with the existing
+    pool == solo guarantee into sharded == solo."""
+    cfg, plan, sharded, baseline = _setup(arch, use_pallas)
+    n = 4
+    reqs = _requests(cfg, n, SCHEDULES[schedule](n))
+    got = sharded.run(reqs)
+    want = baseline.run(reqs)
+    assert sharded.last_stats.data_shards == plan.data_shards
+    assert sharded.last_stats.model_shards == plan.model_shards
+    assert baseline.last_stats.data_shards == 1
+    for r in reqs:
+        np.testing.assert_array_equal(
+            got[r.uid], want[r.uid],
+            err_msg=f"request {r.uid} diverged under the sharded plan",
+        )
+    # sharding must not change the deterministic cost clock either
+    assert (sharded.last_stats.weight_passes
+            == baseline.last_stats.weight_passes)
+    assert (sharded.last_stats.emitted_tokens
+            == baseline.last_stats.emitted_tokens)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+def test_decode_fast_path_matches_chunk_step_sharded(use_pallas):
+    """Carry-over pin: with no slot PREFILLING (and window=None) the
+    engine dispatches plain ``decode_step`` in the sharded path too.
+    Sound only because the plan-jitted fused chunk step at ``n_new=1``
+    and the plan-jitted decode step stay bit-equal on decode rows —
+    identical tokens AND an identical sharded cache afterwards, pinned
+    here per backend through the same ``make_*_step(plan=)`` factories
+    the engine uses."""
+    cfg, params = _params_for("llama3-8b")
+    policy = PALLAS if use_pallas else PAPER_FAITHFUL
+    mesh = meshes.make_serving_mesh()
+    shape = C.ShapeConfig("serve", MAX_LEN, SLOTS, "decode")
+    plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=SLOTS,
+                            page_size=4)
+    with actshard.use_plan(plan):
+        chunk_step = engine_mod.make_chunk_step(cfg, policy, plan=plan)
+        decode_step = engine_mod.make_decode_step(cfg, policy, plan=plan)
+        cache = registry.init_pool_cache(
+            cfg, SLOTS, MAX_LEN, page_size=4, num_pages=plan.num_pages
+        )
+        # stream two unequal prompts in, pool-style, via chunk steps
+        bufs = [[5, 7, 9, 11, 2, 13], [3, 1, 4]]
+        ntok = None
+        while any(bufs):
+            tokens = np.zeros((SLOTS, CHUNK), np.int32)
+            n_new = np.zeros((SLOTS,), np.int32)
+            for s, buf in enumerate(bufs):
+                take = min(CHUNK, len(buf))
+                tokens[s, :take] = buf[:take]
+                n_new[s] = take
+                bufs[s] = buf[take:]
+            ntok, _, cache = chunk_step(
+                params, jnp.asarray(tokens), jnp.asarray(n_new), cache
+            )
+        last = np.asarray(ntok, np.int32)
+        # one decode step, both ways, from the same cache (the steps
+        # donate their cache, so fork it first)
+        cache2 = jax.tree_util.tree_map(jnp.copy, cache)
+        dec = np.zeros((SLOTS, CHUNK), np.int32)
+        dec[:, 0] = last
+        t_chunk, lg_chunk, c_chunk = chunk_step(
+            params, jnp.asarray(dec),
+            jnp.asarray([1] * SLOTS, jnp.int32), cache,
+        )
+        t_plain, lg_plain, c_plain = decode_step(
+            params, jnp.asarray(last), cache2
+        )
+    np.testing.assert_array_equal(np.asarray(t_chunk), np.asarray(t_plain))
+    np.testing.assert_array_equal(np.asarray(lg_chunk), np.asarray(lg_plain))
+    for key in ("k", "v", "pos", "len", "table"):
+        np.testing.assert_array_equal(
+            np.asarray(c_chunk[key]), np.asarray(c_plain[key]),
+            err_msg=f"cache leaf {key!r} diverged",
+        )
+
+
+@pytest.mark.multiprocess
+def test_multiprocess_smoke_two_device_data_axis():
+    """Real 2-way data axis on CPU: a subprocess forces two host devices
+    (the env var must land before jax imports), serves the smoke trace
+    through the sharded pool, and its JSON tokens must byte-match the
+    in-process single-device pool on the same trace and page geometry."""
+    from repro.parallel import smoke
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    src = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.parallel.smoke", "--expect-devices", "2"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    got = json.loads(proc.stdout)
+    assert got["devices"] == 2 and got["data_shards"] == 2
+    assert got["mesh"] == {"data": 2, "model": 1}
+    ref = smoke.run_smoke(sharded=False, num_pages=got["num_pages"])
+    assert got["tokens"] == ref["tokens"]
+    # same trace, same clock: overlap + sharding change wall-clock only
+    assert got["weight_passes"] == ref["weight_passes"]

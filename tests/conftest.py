@@ -7,6 +7,11 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "multiprocess: spawns a subprocess with a forced multi-device host "
+        "platform (XLA_FLAGS=--xla_force_host_platform_device_count)",
+    )
 
 
 # ---------------------------------------------------------------------------

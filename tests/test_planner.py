@@ -54,29 +54,87 @@ def test_plan_degrades_to_replication_on_host_mesh(arch):
 def test_pooled_serving_plan_keyed_by_slot_count():
     """plan_for(pool_slots=) plans the slot-pooled cache tree: structure
     matches registry.init_pool_cache (paged since PR 6 — one span-sized
-    page per slot by default), pos/len/table leaves are replicated (tiny
-    int32 bookkeeping), and the production mesh still validates."""
+    page per slot by default), slot leaves ride the data axis when it
+    divides (docs/DESIGN_scaling.md), ``pos`` stays replicated (gather
+    metadata every shard consults), and the production mesh validates."""
     from repro.models import registry
 
     cfg = C.smoke_config("llama3-8b")
     shape = C.ShapeConfig("serve", 32, 8, "decode")
-    for mesh in (meshes.make_host_mesh(),
-                 meshes.make_abstract_mesh((16, 16), ("data", "model"))):
-        plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=8)
-        assert plan.pool_slots == 8
-        assert plan.page_size == 32 and plan.num_pages == 8
-        pooled = jax.eval_shape(lambda: registry.init_pool_cache(cfg, 8, 32))
-        assert (jax.tree_util.tree_structure(pooled)
-                == jax.tree_util.tree_structure(plan.cache))
-        # physical page store: 8 pages + the null page, per-slot tables
-        assert plan.cache_abstract["pos"].shape == (9, 32)
-        assert plan.cache_abstract["len"].shape == (8,)
-        assert plan.cache_abstract["table"].shape == (8, 1)
-        assert plan.cache["pos"] == P() and plan.cache["len"] == P()
-        assert plan.cache["table"] == P()
+
+    # host mesh: the 1-wide data axis trivially divides everything, so
+    # the slot leaves carry the axis (a physical no-op on one device) and
+    # the default page count needs no rounding
+    plan = planner.plan_for(cfg, meshes.make_host_mesh(), shape=shape,
+                            pool_slots=8)
+    assert plan.pool_slots == 8
+    assert plan.page_size == 32 and plan.num_pages == 8
+    assert plan.data_shards == 1
+    pooled = jax.eval_shape(lambda: registry.init_pool_cache(cfg, 8, 32))
+    assert (jax.tree_util.tree_structure(pooled)
+            == jax.tree_util.tree_structure(plan.cache))
+    # physical page store: 8 pages + the null page, per-slot tables
+    assert plan.cache_abstract["pos"].shape == (9, 32)
+    assert plan.cache_abstract["len"].shape == (8,)
+    assert plan.cache_abstract["table"].shape == (8, 1)
+    assert plan.cache["pos"] == P()
+    assert plan.cache["len"] == P("data")
+    assert plan.cache["table"] == P("data")
+
+    # production mesh: 8 slots are ragged over the 16-wide data axis, so
+    # the slot leaves fall back to replication, while the defaulted page
+    # count rounds up so the page-store axis (num_pages + 1) divides
+    plan = planner.plan_for(
+        cfg, meshes.make_abstract_mesh((16, 16), ("data", "model")),
+        shape=shape, pool_slots=8,
+    )
+    assert plan.page_size == 32 and plan.num_pages == 15  # 15 + 1 = 16
+    assert plan.data_shards == 16 and plan.model_shards == 16
+    assert plan.cache_abstract["pos"].shape == (16, 32)
+    assert plan.cache["pos"] == P()
+    assert plan.cache["len"] == P() and plan.cache["table"] == P()
+
     with pytest.raises(planner.ShardingPlanError, match="pool_slots"):
         planner.plan_for(cfg, meshes.make_host_mesh(), shape=shape,
                          pool_slots=4)
+
+
+def test_sharded_pool_plan_keyed_by_mesh_shape():
+    """The sharded-pool layout (docs/DESIGN_scaling.md): on a mesh whose
+    data axis divides the slot count, slots / page tables / page stores /
+    beta leaves shard over 'data', weights keep their 'model' shards, and
+    the mesh shape is recorded as a plan key next to the page geometry."""
+    from repro.core.policy import KV_PINNED
+
+    cfg = C.smoke_config("llama3-8b")
+    shape = C.ShapeConfig("serve", 32, 8, "decode")
+    mesh = meshes.make_abstract_mesh((2, 2), ("data", "model"))
+    plan = planner.plan_for(cfg, mesh, shape=shape, pool_slots=8,
+                            page_size=4, kv_quant=KV_PINNED)
+    assert plan.data_shards == 2 and plan.model_shards == 2
+    assert plan.mesh_shape() == {"data": 2, "model": 2}
+    # default pages = 8 slots * 8 pages/slot = 64; 64 + 1 rounds to 66 so
+    # the page-store axis splits in two
+    assert plan.page_size == 4 and plan.num_pages == 65
+    assert plan.kv_bits == KV_PINNED.bits
+    # slot axis -> data; physical-page axis -> data (k/v and betas alike)
+    assert plan.cache["len"] == P("data")
+    assert plan.cache["table"] == P("data")
+    assert tuple(plan.cache["k"])[1] == "data"
+    assert tuple(plan.cache["k_beta"])[1] == "data"
+    assert tuple(plan.cache["v_beta"])[1] == "data"
+    assert plan.cache["pos"] == P()
+    # an explicit num_pages is honoured verbatim (no silent rounding)
+    plan2 = planner.plan_for(cfg, mesh, shape=shape, pool_slots=8,
+                             page_size=4, num_pages=64)
+    assert plan2.num_pages == 64
+    # and the multi-pod mesh composes ('pod', 'data') on the slot axis
+    plan3 = planner.plan_for(
+        cfg, meshes.make_abstract_mesh((2, 2, 16), ("pod", "data", "model")),
+        shape=shape, pool_slots=8,
+    )
+    assert plan3.data_shards == 4
+    assert plan3.cache["len"] == P(("pod", "data"))
 
 
 def test_pooled_serving_plan_keyed_by_page_geometry():

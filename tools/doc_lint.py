@@ -1,0 +1,144 @@
+"""Doc lint: keep the design docs and the architecture index honest.
+
+Three checks over ``docs/*.md`` (CI fails on any violation):
+
+1. **Markdown links resolve.**  Every relative ``[text](target)`` link
+   must point at an existing file (http(s)/mailto/pure-anchor links are
+   skipped; a ``#fragment`` suffix is stripped before the check).
+2. **Repo paths exist.**  Any path-shaped reference — backticked or
+   bare — rooted at ``src/``, ``tests/``, ``docs/``, ``benchmarks/``,
+   ``tools/`` or ``.github/`` (plus module-style ``repro/...``, mapped
+   to ``src/repro/...``) must exist on disk, so a doc can't keep
+   pointing at a file a refactor moved.  ``::testname`` suffixes are
+   stripped.
+3. **Contracts are pinned.**  Every row of the named-contract table in
+   ``docs/ARCHITECTURE.md`` (``| `TOKEN` | ... | `tests/...` | [doc] |``)
+   must (a) name a conformance test file that exists, and (b) link a
+   design doc whose text actually mentions the contract token — a
+   bit-exactness contract with no living pin or no prose is a dangling
+   promise.
+
+Run it the way CI does:
+
+    python tools/doc_lint.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+#: prefixes a path-shaped token may start with to be existence-checked
+PATH_ROOTS = ("src/", "tests/", "docs/", "benchmarks/", "tools/", ".github/")
+PATH_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_PATH_RE = re.compile(r"[A-Za-z0-9_.][A-Za-z0-9_./:-]*")
+_CONTRACT_ROW_RE = re.compile(
+    r"^\|\s*`(?P<token>[A-Z][A-Z0-9_]+)`\s*\|"      # | `TOKEN` |
+    r"[^|]*\|"                                       # what it pins
+    r"\s*`(?P<test>[^`|]+)`\s*\|"                    # | `tests/...` |
+    r"\s*\[[^\]]*\]\((?P<doc>[^)]+)\)\s*\|\s*$"      # | [doc](file) |
+)
+
+
+def _resolve(token: str) -> Path | None:
+    """Repo path for a path-shaped token, or None if out of scope."""
+    token = token.split("::", 1)[0].rstrip(".,;:)")
+    if token.startswith("repro/"):
+        token = "src/" + token
+    if not token.startswith(PATH_ROOTS):
+        return None
+    if token.endswith("/"):
+        return REPO / token  # directory reference
+    if not token.endswith(PATH_EXTS):
+        return None
+    return REPO / token
+
+
+def check_links(md: Path, text: str, errors: list) -> None:
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md.parent / rel).exists():
+            errors.append(f"{md.relative_to(REPO)}: dangling link ({target})")
+
+
+def check_paths(md: Path, text: str, errors: list) -> None:
+    seen = set()
+    for m in _PATH_RE.finditer(text):
+        p = _resolve(m.group(0))
+        if p is None or p in seen:
+            continue
+        seen.add(p)
+        if not p.exists():
+            errors.append(
+                f"{md.relative_to(REPO)}: references missing repo path "
+                f"({m.group(0)})"
+            )
+
+
+def check_contracts(index: Path, errors: list) -> None:
+    if not index.exists():
+        errors.append(f"{index.relative_to(REPO)}: missing")
+        return
+    rows = [
+        m for line in index.read_text().splitlines()
+        if (m := _CONTRACT_ROW_RE.match(line.strip()))
+    ]
+    if not rows:
+        errors.append(
+            f"{index.relative_to(REPO)}: no contract rows found — the "
+            "named-invariant table is the point of the index"
+        )
+    for m in rows:
+        token, test, doc = m.group("token"), m.group("test"), m.group("doc")
+        test_path = REPO / test
+        if not test_path.exists():
+            errors.append(
+                f"ARCHITECTURE.md: contract {token} pins {test} — file "
+                "does not exist"
+            )
+        doc_path = index.parent / doc.split("#", 1)[0]
+        if not doc_path.exists():
+            errors.append(
+                f"ARCHITECTURE.md: contract {token} cites {doc} — doc "
+                "does not exist"
+            )
+        elif token not in doc_path.read_text():
+            errors.append(
+                f"ARCHITECTURE.md: contract {token} cites {doc}, but the "
+                "doc never mentions the token — add the contract name "
+                "where the invariant is specified"
+            )
+
+
+def main(argv=None) -> int:
+    errors: list = []
+    mds = sorted(DOCS.glob("*.md"))
+    if not mds:
+        print("doc_lint: no docs found under docs/", file=sys.stderr)
+        return 1
+    for md in mds:
+        text = md.read_text()
+        check_links(md, text, errors)
+        check_paths(md, text, errors)
+    check_contracts(DOCS / "ARCHITECTURE.md", errors)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"doc_lint: {len(mds)} docs OK (links, repo paths, "
+          "contract pins)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
